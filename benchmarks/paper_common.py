@@ -1,0 +1,95 @@
+"""Shared helpers for the paper-table benchmarks.
+
+All benchmarks run the REAL 3-phase pipeline on synthetic stand-in datasets
+(offline container) with CLI-scalable step budgets; defaults are sized for
+a 1-core CPU. Budgets scale to the paper's 500/200/50-epoch recipes via
+--scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import discretize, mps, pipeline, sampling
+from repro.data import synthetic
+from repro.models import cnn
+
+BENCHES = {
+    "cifar10": (cnn.resnet9, synthetic.CIFAR10_LIKE),
+    "gsc": (cnn.dscnn, synthetic.GSC_LIKE),
+    "tinyimagenet": (cnn.resnet18, synthetic.TINYIMAGENET_LIKE),
+}
+
+
+def small_graph(bench: str, width: int = 8):
+    builder, spec = BENCHES[bench]
+    if bench == "tinyimagenet":
+        return builder(), spec          # resnet18 has fixed widths
+    return builder(width=width), spec
+
+
+def base_config(steps: int = 80, lam: float = 1e-4, **kw
+                ) -> pipeline.SearchConfig:
+    return pipeline.SearchConfig(
+        warmup_steps=steps, search_steps=steps,
+        finetune_steps=max(steps // 2, 10), batch=32, lam=lam, **kw)
+
+
+def fixed_precision_baseline(g, spec, bits: int, steps: int):
+    """Train a w<bits>a8 fixed-precision reference (paper baselines)."""
+    pw = (0, 2, 4, 8) if bits in (2, 4, 8) else (0, bits)
+    idx = pw.index(bits)
+    gamma_init = {}
+    geoms = cnn.cost_geoms(g)
+    for gm in geoms:
+        onehot = jnp.full((gm.cout, len(pw)), -40.0).at[:, idx].set(40.0)
+        gamma_init[gm.gamma] = onehot
+    cfg = base_config(steps=steps, lam=0.0, pw=pw)
+    res = pipeline.run_pipeline(g, spec, cfg, gamma_init=gamma_init)
+    return res
+
+
+def run_sequential_pit_mixprec(g, spec, steps: int, lam_pit: float,
+                               lam_mix: float, n_pit_models: int = 2):
+    """The paper's baseline flow: PIT channel pruning (float), pick a seed,
+    then MixPrec channel-wise MPS on the pruned net. Returns (result,
+    total_seconds) -- total includes training the PIT front (N models)."""
+    t0 = time.time()
+    pit_results = []
+    for i, lam in enumerate([lam_pit * f for f in
+                             np.linspace(0.5, 2.0, n_pit_models)]):
+        cfg1 = pipeline.SearchConfig(
+            warmup_steps=steps, search_steps=steps,
+            finetune_steps=max(steps // 2, 10), batch=32, lam=lam,
+            pw=(0, 32), cost_model="size", seed=i)
+        pit_results.append(pipeline.run_pipeline(g, spec, cfg1))
+    # pick the PIT seed: best accuracy
+    seed_res = max(pit_results, key=lambda r: r["acc_final"])
+    pruned = seed_res["assignment"]["gamma"]
+
+    # stage 2: MixPrec on the pruned net -- pruned channels pinned to 0-bit,
+    # kept channels cannot be pruned further (0-bit logit pinned low)
+    pw2 = (0, 2, 4, 8)
+    gamma_init = {}
+    for grp, bits in pruned.items():
+        c = len(bits)
+        base = sampling.init_selection_logits(pw2, (c,))
+        base = jnp.where(jnp.asarray(bits)[:, None] == 0,
+                         jnp.full((c, 4), -40.0).at[:, 0].set(40.0),
+                         base.at[:, 0].set(-40.0))
+        gamma_init[grp] = base
+    cfg2 = pipeline.SearchConfig(
+        warmup_steps=0, search_steps=steps,
+        finetune_steps=max(steps // 2, 10), batch=32, lam=lam_mix,
+        pw=pw2, cost_model="size")
+    res = pipeline.run_pipeline(g, spec, cfg2,
+                                init_net_folded=seed_res["net"],
+                                gamma_init=gamma_init)
+    return res, time.time() - t0
+
+
+def csv_row(name: str, wall_s: float, derived: str) -> str:
+    return f"{name},{wall_s * 1e6:.0f},{derived}"

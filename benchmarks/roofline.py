@@ -1,0 +1,162 @@
+"""Roofline report: reads artifacts/dryrun/*.json and emits the
+EXPERIMENTS.md Sec-Roofline table (single-pod baselines for all cells),
+including MODEL_FLOPS = 6*N(_active)*D and the useful-compute ratio.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.models import lm
+
+try:
+    import jax
+    import jax.tree_util as jtu
+except Exception:  # pragma: no cover
+    jax = None
+
+
+def param_counts(arch: str) -> tuple[float, float]:
+    """(N_total, N_active) -- active discounts MoE experts to k/E."""
+    cfg = registry.ARCHS[arch]
+    tree = lm.abstract_params(cfg)
+    total = active = 0.0
+    for path, leaf in jtu.tree_flatten_with_path(tree)[0]:
+        keys = [getattr(p, "key", "") for p in path]
+        if "gamma" in keys:
+            continue
+        n = float(np.prod(leaf.shape))
+        total += n
+        frac = 1.0
+        # expert weights (leaf 'w' under ffn/w_{gate,up,down}, not the
+        # dense_residual 'shared' FFN): stacked (L, E, d, f)
+        if "ffn" in keys and "shared" not in keys and cfg.is_moe \
+                and len(keys) >= 2 \
+                and keys[-2] in ("w_gate", "w_up", "w_down") \
+                and len(leaf.shape) >= 3:
+            frac = cfg.experts_per_token / cfg.n_experts
+        active += n * frac
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """First-order useful FLOPs of the step (per whole cluster)."""
+    cfg = registry.ARCHS[arch]
+    shape = SHAPES[shape_name]
+    _, n_active = param_counts(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def load_records(out_dir="artifacts/dryrun", mesh="16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh or r.get("search"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def build_table(out_dir="artifacts/dryrun"):
+    rows = []
+    for r in load_records(out_dir):
+        arch, shape = r["arch"], r["shape"]
+        if "skipped" in r:
+            rows.append({"arch": arch, "shape": shape,
+                         "skipped": r["skipped"]})
+            continue
+        if not r.get("ok"):
+            rows.append({"arch": arch, "shape": shape,
+                         "error": r.get("error", "?")})
+            continue
+        roof = r["roofline"]
+        mf = model_flops(arch, shape)
+        hlo_total = roof["flops_per_device"] * roof["n_devices"]
+        useful = mf / hlo_total if hlo_total else 0.0
+        # roofline fraction: useful-FLOPs-limited time / bound step time
+        ideal_s = mf / roof["n_devices"] / 197e12
+        frac = ideal_s / roof["bound_step_s"] if roof["bound_step_s"] else 0
+        rows.append({
+            "arch": arch, "shape": shape,
+            "compute_s": roof["compute_s"],
+            "memory_s": roof["memory_s"],
+            "memory_s_lower": roof.get("memory_s_lower", 0.0),
+            "collective_s": roof["collective_s"],
+            "dominant": roof["dominant"],
+            "model_flops": mf,
+            "useful_ratio": useful,
+            "roofline_fraction": frac,
+            "temp_gb": r["memory_analysis"].get("temp_bytes", 0) / 2**30,
+        })
+    return rows
+
+
+_FIX = {"compute": "what would help: larger per-device batch or fewer "
+        "redundant FLOPs (remat policy)",
+        "memory": "what would help: better fusion / bf16 intermediates / "
+        "kv+activation layout",
+        "collective": "what would help: overlap FSDP gathers with compute, "
+        "shard differently, or compress gradients"}
+
+
+def to_markdown(rows) -> str:
+    out = ["| arch | shape | compute s | memory s (lower) | collective s |"
+           " bound | MODEL_FLOPS | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                       f"skipped | -- | -- | -- |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                       f"ERROR | -- | -- | -- |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} ({r['memory_s_lower']:.4f}) | "
+            f"{r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['model_flops']:.3e} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = build_table(args.out)
+    if args.markdown:
+        print(to_markdown(rows))
+        return
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "model_flops,useful_ratio,roofline_fraction")
+    for r in rows:
+        if "skipped" in r or "error" in r:
+            print(f"{r['arch']},{r['shape']},,,,"
+                  f"{'skipped' if 'skipped' in r else 'error'},,,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.5f},"
+              f"{r['memory_s']:.5f},{r['collective_s']:.5f},"
+              f"{r['dominant']},{r['model_flops']:.4e},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

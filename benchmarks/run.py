@@ -1,0 +1,57 @@
+"""Benchmark orchestrator: one entry per paper table/figure + kernel
+micro-benches + the roofline report. Prints ``name,us_per_call,derived``
+CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--steps 60] [--skip fig5,...]
+
+Step budgets default to 1-core-CPU-friendly values; pass --steps to scale
+toward the paper's full 500/200/50-epoch recipe.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--skip", default="")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    skip = set(args.skip.split(",")) if args.skip else set()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import kernel_bench, paper_tables
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    def want(name):
+        if only is not None:
+            return name in only
+        return name not in skip
+
+    if want("kernels"):
+        kernel_bench.main()
+    for name, fn in paper_tables.ALL.items():
+        if want(name):
+            fn(steps=args.steps)
+    if want("roofline"):
+        try:
+            from benchmarks import roofline
+            rows = roofline.build_table()
+            n_ok = sum(1 for r in rows if "compute_s" in r)
+            worst = [r for r in rows if r.get("roofline_fraction")]
+            worst = sorted(worst, key=lambda r: r["roofline_fraction"])
+            d = (f"cells={n_ok};worst={worst[0]['arch']}/"
+                 f"{worst[0]['shape']}" if worst else f"cells={n_ok}")
+            print(f"roofline/baselines,{(time.time()-t0)*1e6:.0f},{d}")
+        except Exception as e:
+            print(f"roofline/baselines,0,unavailable:{e}")
+    print(f"total,{(time.time() - t0) * 1e6:.0f},done", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Pareto sweep (paper Fig. 4/6): run the joint search at several
+regularization strengths and cost models, print the accuracy-vs-cost front,
+and export the best model's mixed-precision deployment plan (Fig. 3
+reordering + per-precision sub-layers + NE16 refinement).
+
+    PYTHONPATH=src python examples/compress_pareto.py --bench gsc
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import costs, discretize, pipeline
+from repro.data import synthetic
+from repro.models import cnn
+
+BENCH = {"cifar10": (cnn.resnet9, synthetic.CIFAR10_LIKE),
+         "gsc": (cnn.dscnn, synthetic.GSC_LIKE)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="gsc", choices=list(BENCH))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--cost", default="size")
+    ap.add_argument("--lams", default="2,8,20")
+    args = ap.parse_args()
+    builder, spec = BENCH[args.bench]
+    g = builder(width=8)
+    geoms = cnn.cost_geoms(g)
+
+    front = []
+    for lam in [float(x) for x in args.lams.split(",")]:
+        cfg = pipeline.SearchConfig(
+            warmup_steps=args.steps, search_steps=args.steps,
+            finetune_steps=args.steps // 2, batch=32, lam=lam,
+            cost_model=args.cost, ne16_refine=(args.cost == "ne16"))
+        res = pipeline.run_pipeline(g, spec, cfg)
+        front.append((lam, res))
+        print(f"lambda={lam:6.1f}: acc={res['acc_final']:.3f} "
+              f"size={res['size_bytes']/1024:7.2f} kB "
+              f"pruned={100*res['prune_fraction']:4.1f}%")
+
+    # export the most accurate compressed model's deployment plan
+    best = max(front, key=lambda t: (t[1]["acc_final"],
+                                     -t[1]["size_bytes"]))[1]
+    assign = best["assignment"]
+    split = discretize.sublayer_split(assign, (0, 2, 4, 8))
+    print("\ndeployment plan (Fig. 3: per-precision sub-layers after "
+          "channel reordering):")
+    for grp, segs in split.items():
+        desc = ", ".join(f"{b}-bit x{stop-start}" for b, start, stop in segs)
+        print(f"  {grp:6s} -> [{desc}]")
+    refined, promoted = discretize.ne16_refine(geoms, {
+        "gamma": {k: np.asarray(v) for k, v in assign["gamma"].items()},
+        "delta": assign["delta"], "alpha": assign["alpha"]})
+    print(f"\nNE16 post-search refinement promoted {promoted} channels "
+          f"(32-lane alignment)")
+
+
+if __name__ == "__main__":
+    main()

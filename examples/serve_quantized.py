@@ -1,0 +1,64 @@
+"""Serve a small model with batched requests through the mixed-precision
+quantized path (paper Fig. 3 / Sec. 4.5): channels reordered into
+per-precision groups, weights bit-packed, each group served by the
+quant_matmul kernel (int8 MXU on TPU; oracle on CPU).
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serve import engine
+
+
+def main():
+    # 1) batched LM serving (greedy decode with KV caches)
+    cfg = registry.reduced(registry.ARCHS["llama3.2-1b"])
+    params = lm.init_params(cfg, jax.random.key(0))
+    eng = engine.ServeEngine(cfg, params, max_len=64)
+    prompts = np.asarray([[3, 1, 4, 1, 5], [2, 7, 1, 8, 2],
+                          [1, 1, 2, 3, 5], [9, 8, 7, 6, 5]], np.int32)
+    t0 = time.time()
+    out = eng.generate(prompts, n_tokens=12)
+    dt = time.time() - t0
+    print(f"batched decode: {out.shape[0]} requests x {out.shape[1]} "
+          f"tokens in {dt:.2f}s")
+    for i, row in enumerate(out):
+        print(f"  req{i}: {list(row)}")
+
+    # 2) a mixed-precision layer served through the quantized kernel path
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(128, 256)).astype(np.float32) * 0.1
+    channel_bits = rng.choice([0, 2, 4, 8], size=128,
+                              p=[0.15, 0.2, 0.3, 0.35])
+    packed, perm, kept = engine.export_mixed_precision_layer(w, channel_bits)
+    x = jnp.asarray(rng.normal(size=(16, 256)).astype(np.float32))
+    y = engine.mixed_precision_matmul(x, packed)
+    # deployment-consistency reference: the discretized fake-quant layer
+    # (what the fine-tuned model actually computes)
+    from repro.core import quantizers
+    w_perm = w[perm]
+    bits_perm = np.asarray(channel_bits)[perm]
+    rows = [np.asarray(quantizers.quantize_weights_symmetric(
+        jnp.asarray(w_perm[i:i + 1]), int(b), 0))[0]
+        for i, b in enumerate(bits_perm) if b > 0]
+    ref = x @ jnp.asarray(np.stack(rows)).T
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    packed_bytes = sum(int(p[1].size) for p in packed)
+    hist = {b: int((np.asarray(channel_bits) == b).sum())
+            for b in (0, 2, 4, 8)}
+    print(f"\nmixed-precision layer: {kept}/128 channels kept ({hist})")
+    print(f"packed weight bytes: {packed_bytes} "
+          f"(fp32 baseline: {w.size*4}; "
+          f"{w.size*4/packed_bytes:.1f}x smaller)")
+    print(f"kernel-vs-fakequant deployment error: {100*rel:.2f}% "
+          f"(int8 activation quantization only)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Mixed-precision search (MPS) effective tensors — paper Sec. 4.1/4.2.
+
+Weights: per-output-channel selection over P_W (which includes 0-bit ==
+structured pruning). Activations: per-tensor selection over P_X, PACT
+quantized.
+
+All functions here are pure; the "module" state lives in plain pytrees:
+
+  mps_weight params   : {'w': (..., C_out on `channel_axis`), 'gamma': (C_out, |P_W|)}
+  mps_act params      : {'delta': (|P_X|,), 'alpha': ()}
+
+``SearchCtx`` carries the sampling method, temperature and (optional) rng so
+a whole model can thread one context through every MPS site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers, sampling
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchCtx:
+    """Per-step search context threaded through all MPS sites."""
+    method: str = sampling.SOFTMAX
+    tau: jax.Array | float = 1.0
+    rng: Optional[jax.Array] = None
+    # when True use the fused Pallas path for the effective-weight combine
+    use_kernel: bool = False
+
+    def fold_rng(self, tag: int) -> Optional[jax.Array]:
+        if self.rng is None:
+            return None
+        return jax.random.fold_in(self.rng, tag)
+
+
+def gamma_probs(gamma: jax.Array, ctx: SearchCtx, tag: int = 0) -> jax.Array:
+    """(C_out, |P_W|) probability rows for the weight selection params."""
+    return sampling.sample(gamma, ctx.method, ctx.tau, ctx.fold_rng(tag))
+
+
+def delta_probs(delta: jax.Array, ctx: SearchCtx, tag: int = 0) -> jax.Array:
+    """(|P_X|,) probability vector for the activation selection params."""
+    return sampling.sample(delta, ctx.method, ctx.tau, ctx.fold_rng(tag))
+
+
+def effective_weight(w: jax.Array, gamma: jax.Array,
+                     precisions: tuple[int, ...], ctx: SearchCtx,
+                     channel_axis: int = 0, tag: int = 0) -> jax.Array:
+    """Paper Eq. 5: W_hat = sum_p gamma_hat[:, p] * Q_p(W).
+
+    ``gamma`` has shape (C_out, |P_W|); the probability of precision p for
+    channel i multiplies the p-bit fake-quantized variant of channel i.
+    """
+    probs = gamma_probs(gamma, ctx, tag)  # (C, |P|)
+    if probs.shape[0] == 1 and w.shape[channel_axis] != 1:
+        # layer-wise MPS (EdMIPS-style): one selection row for the whole
+        # layer, broadcast over channels (gradients sum over channels)
+        probs = jnp.broadcast_to(probs,
+                                 (w.shape[channel_axis], probs.shape[1]))
+    if ctx.use_kernel and w.ndim == 2 and channel_axis == 0:
+        from repro.kernels.mps_combine import ops as mps_ops
+        return mps_ops.mps_combine(w, probs, precisions)
+    qs = quantizers.quantize_weights_multi(w, precisions, channel_axis)
+    # reshape probs so that the channel dim broadcasts on `channel_axis`
+    shape = [len(precisions)] + [1] * w.ndim
+    shape[1 + channel_axis] = w.shape[channel_axis]
+    probs_b = jnp.moveaxis(probs, -1, 0).reshape(shape)
+    return jnp.sum(probs_b * qs, axis=0)
+
+
+def effective_activation(x: jax.Array, delta: jax.Array, alpha: jax.Array,
+                         precisions: tuple[int, ...], ctx: SearchCtx,
+                         tag: int = 0) -> jax.Array:
+    """Paper Eq. 4: X_hat = sum_p delta_hat[p] * Q_p(X) (PACT variants)."""
+    probs = delta_probs(delta, ctx, tag)  # (|Px|,)
+    qs = quantizers.quantize_acts_multi(x, alpha, precisions)
+    probs_b = probs.reshape((len(precisions),) + (1,) * x.ndim)
+    return jnp.sum(probs_b * qs, axis=0)
+
+
+def init_mps_weight(c_out: int, precisions: tuple[int, ...]) -> jax.Array:
+    """Per-channel gamma logits, paper Eq. 13 init."""
+    return sampling.init_selection_logits(precisions, (c_out,))
+
+def init_mps_act(precisions: tuple[int, ...], alpha0: float = 6.0):
+    """(delta logits, PACT alpha) initial values."""
+    return sampling.init_selection_logits(precisions), jnp.asarray(alpha0)
+
+
+def rescale_weights_for_search(w: jax.Array, gamma: jax.Array,
+                               precisions: tuple[int, ...], ctx: SearchCtx,
+                               channel_axis: int = 0) -> jax.Array:
+    """Paper Eq. 12 weight rescaling at the start of the search phase.
+
+    The 0-bit variant contributes a constant zero to the effective weight,
+    systematically shrinking its magnitude vs. the post-warmup weights. We
+    divide each channel by the total non-zero-bit probability mass so the
+    effective tensor keeps the warmup magnitude.
+    """
+    probs = gamma_probs(gamma, ctx)  # (C, |P|)
+    nonzero = jnp.asarray([p != 0 for p in precisions], w.dtype)
+    mass = jnp.sum(probs * nonzero, axis=-1)  # (C,)
+    mass = jnp.maximum(mass, 1e-3)
+    if mass.shape[0] == 1:          # layer-wise gamma
+        mass = jnp.broadcast_to(mass, (w.shape[channel_axis],))
+    shape = [1] * w.ndim
+    shape[channel_axis] = w.shape[channel_axis]
+    return w / mass.reshape(shape)
+
+
+def discretize_gamma(gamma: jax.Array, precisions: tuple[int, ...]
+                     ) -> jax.Array:
+    """Paper Eq. 8: per-channel argmax precision assignment (int array)."""
+    idx = jnp.argmax(gamma, axis=-1)
+    return jnp.asarray(precisions, jnp.int32)[idx]
+
+
+def discretize_delta(delta: jax.Array, precisions: tuple[int, ...]) -> int:
+    """Paper Eq. 7: per-tensor argmax precision assignment."""
+    return int(jnp.asarray(precisions)[int(jnp.argmax(delta))])
+
+
+def expected_bits(gamma: jax.Array, precisions: tuple[int, ...],
+                  ctx: SearchCtx) -> jax.Array:
+    """Per-channel expected bit-width <gamma_hat, P_W> (used by cost models)."""
+    probs = gamma_probs(gamma, ctx)
+    return probs @ jnp.asarray(precisions, probs.dtype)
+
+
+def keep_probability(gamma: jax.Array, precisions: tuple[int, ...],
+                     ctx: SearchCtx) -> jax.Array:
+    """Per-channel probability of NOT being pruned (1 - gamma_hat[:, p0])."""
+    probs = gamma_probs(gamma, ctx)
+    nonzero = jnp.asarray([p != 0 for p in precisions], probs.dtype)
+    return probs @ nonzero

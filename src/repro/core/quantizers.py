@@ -1,0 +1,96 @@
+"""Quantizers used by the joint pruning + mixed-precision search.
+
+Faithful to the paper (Sec. 2.1 / 5.1):
+  * weights  -> symmetric min-max, per-channel scale, signed integer grid
+  * activations -> PACT (learnable clip value alpha), affine unsigned grid
+  * 0-bit weight "quantization" == structured pruning (constant zero)
+
+All quantizers are fake-quant (simulate integer grid in float) and use the
+straight-through estimator (STE) for gradients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Small epsilon to avoid division by zero scales on all-zero channels.
+_EPS = 1e-8
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """round() with identity gradient (straight-through estimator)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def quantize_weights_symmetric(w: jax.Array, bits: int, channel_axis: int = 0
+                               ) -> jax.Array:
+    """Symmetric min-max per-channel fake quantization of weights.
+
+    ``bits == 0`` returns zeros (structured pruning of the channel).
+    The scale is computed per output channel (``channel_axis``) as
+    ``max|w| / (2^(b-1) - 1)`` so that the integer grid is symmetric.
+    """
+    if bits == 0:
+        return jnp.zeros_like(w)
+    if bits >= 32:  # identity / float passthrough
+        return w
+    qmax = float(2 ** (bits - 1) - 1)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != channel_axis)
+    absmax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(absmax, _EPS) / qmax
+    # stop_gradient on scale: the paper trains the weights through the STE,
+    # the min-max scale follows the weights (no learned scale for weights).
+    scale = jax.lax.stop_gradient(scale)
+    # clip BEFORE round: same forward values, but the STE gradient mask is
+    # the standard raw-value convention 1{|w/s| < qmax} (clip-after-round
+    # would zero-split the gradient of every element that rounds to the
+    # extreme grid level -- most of the tensor at 2 bits)
+    q = ste_round(jnp.clip(w / scale, -qmax, qmax))
+    return q * scale
+
+
+def quantize_weights_multi(w: jax.Array, precisions: tuple[int, ...],
+                           channel_axis: int = 0) -> jax.Array:
+    """Stack of fake-quantized variants of ``w``: shape (|P|, *w.shape)."""
+    return jnp.stack(
+        [quantize_weights_symmetric(w, b, channel_axis) for b in precisions])
+
+
+def pact_quantize(x: jax.Array, alpha: jax.Array, bits: int) -> jax.Array:
+    """PACT activation fake quantization.
+
+    y = clip(x, 0, alpha), quantized to an unsigned ``bits``-bit grid with
+    step alpha/(2^b - 1). Gradient flows to ``alpha`` through the clip
+    boundary (as in the PACT paper) and to ``x`` via STE.
+    """
+    if bits >= 32:
+        return jax.nn.relu(x)
+    alpha = jnp.maximum(alpha, _EPS)
+    levels = float(2 ** bits - 1)
+    clipped = jnp.clip(x, 0.0, alpha)
+    step = alpha / levels
+    return ste_round(clipped / step) * step
+
+
+def quantize_acts_multi(x: jax.Array, alpha: jax.Array,
+                        precisions: tuple[int, ...]) -> jax.Array:
+    """Stack of PACT-quantized variants of ``x``: shape (|Px|, *x.shape)."""
+    return jnp.stack([pact_quantize(x, alpha, b) for b in precisions])
+
+
+def integerize_weights(w: jax.Array, bits: int, channel_axis: int = 0):
+    """Return (int_weights, per-channel scale) on the true integer grid.
+
+    Used at deployment/export time (after discretization). ``bits == 0``
+    channels should have been removed already; if present they map to 0.
+    """
+    if bits == 0:
+        return jnp.zeros(w.shape, jnp.int8), jnp.zeros(
+            tuple(1 if i != channel_axis else w.shape[i]
+                  for i in range(w.ndim)), w.dtype)
+    qmax = float(2 ** (bits - 1) - 1)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != channel_axis)
+    absmax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(absmax, _EPS) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale

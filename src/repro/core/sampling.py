@@ -1,0 +1,69 @@
+"""Bit-width selection parameter sampling (paper Eq. 3).
+
+Three sampling methods over the selection logits:
+  * SM   -- softmax with temperature tau
+  * AM   -- argmax (the tau -> 0 limit); forward is a hard one-hot,
+            backward uses the tau-softmax surrogate (straight-through)
+  * HGSM -- hard Gumbel-softmax: Gumbel-perturbed argmax forward,
+            soft Gumbel-softmax backward
+
+``logits`` may be (|P|,) for a per-layer activation assignment (delta) or
+(C_out, |P|) for per-channel weight assignment (gamma); sampling is applied
+along the last axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SOFTMAX = "softmax"
+ARGMAX = "argmax"
+GUMBEL = "gumbel"
+SAMPLERS = (SOFTMAX, ARGMAX, GUMBEL)
+
+
+def _hard_from_soft(soft: jax.Array) -> jax.Array:
+    """One-hot of the soft distribution's argmax, with soft gradients."""
+    hard = jax.nn.one_hot(jnp.argmax(soft, axis=-1), soft.shape[-1],
+                          dtype=soft.dtype)
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def sample(logits: jax.Array, method: str, tau: jax.Array | float,
+           rng: jax.Array | None = None) -> jax.Array:
+    """Return a probability vector (rows sum to 1) over the precision set."""
+    tau = jnp.maximum(jnp.asarray(tau, logits.dtype), 1e-4)
+    if method == SOFTMAX:
+        return jax.nn.softmax(logits / tau, axis=-1)
+    if method == ARGMAX:
+        return _hard_from_soft(jax.nn.softmax(logits / tau, axis=-1))
+    if method == GUMBEL:
+        if rng is None:
+            raise ValueError("gumbel sampling requires an rng key")
+        g = jax.random.gumbel(rng, logits.shape, logits.dtype)
+        return _hard_from_soft(jax.nn.softmax((logits + g) / tau, axis=-1))
+    raise ValueError(f"unknown sampling method {method!r}")
+
+
+def temperature_schedule(initial: float, decay: float):
+    """Per-epoch exponential temperature decay: tau_e = initial * decay**e.
+
+    The paper uses decay = exp(-0.045) for CIFAR-10/GSC and 0.638 for
+    Tiny ImageNet (fewer epochs, same final temperature).
+    """
+    def tau_at(epoch) -> jax.Array:
+        return jnp.asarray(initial, jnp.float32) * jnp.power(
+            jnp.asarray(decay, jnp.float32), epoch)
+    return tau_at
+
+
+def init_selection_logits(precisions: tuple[int, ...],
+                          leading_shape: tuple[int, ...] = ()) -> jax.Array:
+    """Paper Eq. 13: logits proportional to the precision, gamma_p = p/max(P).
+
+    Higher precisions start more likely; 0-bit (pruning) starts least likely,
+    which avoids early gradient-flow interruption.
+    """
+    pmax = float(max(precisions))
+    base = jnp.asarray([p / pmax for p in precisions], jnp.float32)
+    return jnp.broadcast_to(base, leading_shape + (len(precisions),)).copy()

@@ -1,0 +1,340 @@
+"""Static analysis of compiled (SPMD-partitioned, per-device) HLO text.
+
+This is the dry-run "profiler": with no TPU attached, the optimized HLO is
+the ground truth for what one device computes and what it moves over the
+interconnect. Unlike ``compiled.cost_analysis()`` (which visits each while
+body once), this analyzer multiplies loop bodies by their trip counts,
+which it recovers from the ``s32[] constant(N)`` bound in each while's
+condition computation -- exactly how jax.lax.scan lowers.
+
+Reported, per device:
+  * flops            -- 2*M*N*K for every dot (+ trip-count weighting)
+  * bytes            -- operand+result bytes of substantive ops (an
+                        HBM-traffic proxy, same convention as XLA's
+                        HloCostAnalysis "bytes accessed")
+  * collective bytes -- result bytes of all-reduce/all-gather/
+                        reduce-scatter/all-to-all/collective-permute,
+                        weighted by a ring-traffic factor
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+# bytes moved over links per byte of result (simple ring model)
+_TRAFFIC_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                   "reduce-scatter": 1.0, "all-to-all": 1.0,
+                   "collective-permute": 1.0}
+
+_SKIP_BYTES_KINDS = {"parameter", "constant", "get-tuple-element", "tuple",
+                     "bitcast", "after-all", "partition-id", "replica-id",
+                     # control-flow wrappers: their bodies are counted via
+                     # the call graph; counting the carried tuple would
+                     # double-bill every loop-resident buffer
+                     "while", "conditional", "call"}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR_RE = re.compile(
+    r"\b(body|condition|to_apply|calls|true_computation|"
+    r"false_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_S32_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _array_dims(type_str: str):
+    """All arrays in a (possibly tuple) type: [(dtype, [dims]), ...]."""
+    out = []
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dd = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dt, dd))
+    return out
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _array_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    operands: list
+    line: str
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the paren group opening at s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[Op]] = {}
+    entry = None
+    current = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr is not None and "=" not in line.split("(")[0]:
+            current = hdr.group(2)
+            comps[current] = []
+            if hdr.group(1):
+                entry = current
+            continue
+        if current is None:
+            continue
+        m = _DEF_HEAD_RE.match(line)
+        if m is None:
+            continue
+        name = m.group(1)
+        rest = line[m.end():]
+        # --- type: either a (tuple, ...) (may contain /*index=k*/ comments
+        # with '=') or a plain token like f32[1,2]{1,0} ---
+        if rest.startswith("("):
+            tend = _balanced(rest, 0)
+        else:
+            tend = rest.find(" ")
+            if tend < 0:
+                continue
+        type_str = rest[:tend]
+        tail = rest[tend:].lstrip()
+        km = re.match(r"([\w\-]+)\(", tail)
+        if km is None:
+            continue
+        kind = km.group(1)
+        oend = _balanced(tail, km.end() - 1)
+        operands = _OPERAND_RE.findall(tail[km.end():oend])
+        comps[current].append(Op(name, kind, type_str, operands, line))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    dot_bytes: float = 0.0   # operand/result bytes of dots only (lower
+                             # bound on HBM traffic: compulsory MXU feeds)
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.dot_bytes += other.dot_bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+
+    @property
+    def collective_traffic_bytes(self) -> float:
+        return sum(v * _TRAFFIC_FACTOR.get(k.replace("-start", ""), 1.0)
+                   for k, v in self.coll_bytes.items())
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = _parse_computations(text)
+        self._memo: dict[str, Totals] = {}
+
+    # -------------------------------------------------- per-computation
+    def _trip_count(self, cond_name: str) -> int:
+        ops = self.comps.get(cond_name, [])
+        consts = []
+        for op in ops:
+            consts += [int(x) for x in _S32_CONST_RE.findall(op.line)]
+        return max(consts) if consts else 1
+
+    def _symbols(self, comp: str) -> dict:
+        return {op.name: op.type_str for op in self.comps.get(comp, [])}
+
+    def _dot_flops(self, op: Op, symbols: dict) -> float:
+        arrays = _array_dims(op.type_str)
+        if not arrays:
+            return 0.0
+        _, rdims = arrays[0]
+        out_elems = 1
+        for d in rdims:
+            out_elems *= d
+        # contraction size from the lhs operand's shape
+        c = 1
+        m = _LHS_CDIMS_RE.search(op.line)
+        if m and op.operands:
+            lhs_type = symbols.get(op.operands[0], "")
+            la = _array_dims(lhs_type)
+            if la:
+                _, ldims = la[0]
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(ldims):
+                        c *= ldims[int(idx)]
+        return 2.0 * out_elems * c
+
+    def _direct(self, comp: str) -> Totals:
+        t = Totals()
+        symbols = self._symbols(comp)
+        for op in self.comps.get(comp, []):
+            kind = op.kind.replace("-start", "")
+            if op.kind == "dot":
+                t.flops += self._dot_flops(op, symbols)
+                b = _type_bytes(op.type_str)
+                for o in op.operands:
+                    if o in symbols:
+                        b += _type_bytes(symbols[o])
+                t.dot_bytes += b
+            if kind in COLLECTIVE_KINDS and not op.kind.endswith("-done"):
+                b = _type_bytes(op.type_str)
+                t.coll_bytes[kind] = t.coll_bytes.get(kind, 0.0) + b
+                t.coll_counts[kind] = t.coll_counts.get(kind, 0) + 1
+            if op.kind not in _SKIP_BYTES_KINDS:
+                b = _type_bytes(op.type_str)
+                for o in op.operands:
+                    if o in symbols:
+                        b += _type_bytes(symbols[o])
+                t.bytes += b
+        return t
+
+    def _calls(self, comp: str):
+        """[(callee, mult)] -- while bodies weighted by trip count."""
+        out = []
+        for op in self.comps.get(comp, []):
+            refs = _CALL_ATTR_RE.findall(op.line)
+            if op.kind == "while":
+                body = cond = None
+                for attr, name in refs:
+                    if attr == "body":
+                        body = name
+                    elif attr == "condition":
+                        cond = name
+                trip = self._trip_count(cond) if cond else 1
+                if body:
+                    out.append((body, trip, False))
+                if cond:
+                    out.append((cond, trip, False))
+            else:
+                fused = op.kind == "fusion"
+                for _attr, name in refs:
+                    out.append((name, 1, fused))
+                for m in _BRANCHES_RE.finditer(op.line):
+                    for nm in m.group(1).split(","):
+                        out.append((nm.strip().lstrip("%"), 1, fused))
+        return out
+
+    # ------------------------------------------------------- transitive
+    def total(self, comp: str | None = None, _depth: int = 0,
+              fused: bool = False) -> Totals:
+        """fused=True: the computation body is fused -- its internal ops are
+        register-resident, so only FLOPs (dots) count, not bytes."""
+        key = (comp, fused)
+        comp = comp or self.entry
+        key = (comp, fused)
+        if key in self._memo:
+            return self._memo[key]
+        t = Totals()
+        if comp not in self.comps or _depth > 60:
+            return t
+        self._memo[key] = t  # break cycles
+        direct = self._direct(comp)
+        if fused:
+            direct = Totals(flops=direct.flops, bytes=0.0,
+                            dot_bytes=direct.dot_bytes,
+                            coll_bytes=direct.coll_bytes,
+                            coll_counts=direct.coll_counts)
+        t.add(direct)
+        for callee, mult, callee_fused in self._calls(comp):
+            if callee == comp:
+                continue
+            t.add(self.total(callee, _depth + 1, fused or callee_fused),
+                  mult)
+        return t
+
+
+def analyze(text: str) -> Totals:
+    return HloAnalyzer(text).total()
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e constants from the assignment)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    n_devices: int
+    dot_bytes_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def memory_s_lower(self) -> float:
+        """Compulsory-traffic bound: only MXU operand/result bytes."""
+        return self.dot_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "dot_bytes_per_device": self.dot_bytes_per_device,
+            "memory_s_lower": self.memory_s_lower,
+            "collective_bytes_per_device": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_step_s": self.step_s,
+            "n_devices": self.n_devices,
+        }

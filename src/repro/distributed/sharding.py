@@ -1,0 +1,122 @@
+"""Logical-axis sharding: one place that maps model-semantic axes to mesh
+axes (flax-linen-style logical partitioning, without flax).
+
+Model code annotates tensors with logical axis names; the active rule set
+(installed by the launcher / dry-run) resolves them to PartitionSpecs. With
+no mesh installed (CPU unit tests) everything is a no-op, so the same model
+code runs everywhere.
+
+Default rules (see DESIGN.md Sec. 5):
+  batch   -> ('pod', 'data')   pure DP across pods (one cross-pod collective)
+  seq     -> 'model'           sequence parallelism at block boundaries
+                               (activations saved by remat are 1/TP-sharded)
+  heads/kv_heads/mlp/experts/vocab/ssm_inner -> 'model'   tensor parallelism
+  embed   -> 'data'            FSDP: weights gathered per-layer inside scan
+  layers  -> None
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": "model",          # sequence-parallel residual stream
+    "embed": None,               # activations' d_model axis
+    "w_embed": "data",           # weights' d_model axis (FSDP)
+    "heads": "model",
+    "heads_flat": "model",       # fused (H*hd) projection output axis
+    "kv_heads": "model",
+    "q_hd": None,
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "ssm_inner": "model",        # mamba d_inner / heads axis
+    "ssm_state": None,
+    "layers": None,
+    "kv_seq": "data",            # long-context KV cache: shard sequence
+    "capacity": None,
+}
+
+
+def set_rules(rules: Optional[dict], mesh: Optional[Mesh]):
+    _state.rules = rules
+    _state.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def get_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    """Install (mesh, rules) for model code executed in this block."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    # drop axes the mesh doesn't have (e.g. 'pod' on the single-pod mesh)
+    axes = set(mesh.axis_names)
+
+    def filt(v):
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in axes)
+            return kept if kept else None
+        return v if v in axes else None
+
+    rules = {k: filt(v) for k, v in rules.items()}
+    prev = (get_rules(), get_mesh())
+    set_rules(rules, mesh)
+    try:
+        with mesh:
+            yield rules
+    finally:
+        set_rules(*prev)
+
+
+def spec(*logical_axes) -> P:
+    """Resolve logical axis names to a PartitionSpec under current rules."""
+    rules = get_rules()
+    if rules is None:
+        return P()
+    return P(*[rules.get(a) if a is not None else None
+               for a in logical_axes])
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint under the active rules (no-op w/o mesh)."""
+    mesh = get_mesh()
+    if mesh is None or len(mesh.devices.flat) == 1:
+        return x
+    assert x.ndim == len(logical_axes), (x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, spec(*logical_axes))
+
+
+def sharding_for(*logical_axes) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*logical_axes))
+
+
+def divisible(dim: int, *logical_axes_entry) -> bool:
+    """Check a dim is divisible by the mesh extent of its mapped axes."""
+    mesh = get_mesh()
+    rules = get_rules()
+    if mesh is None or rules is None:
+        return True
+    total = 1
+    for a in logical_axes_entry:
+        m = rules.get(a)
+        axes = (m,) if isinstance(m, str) else (m or ())
+        for ax in axes:
+            total *= mesh.shape[ax]
+    return dim % total == 0

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused multi-precision fake-quant + convex combine.
+
+The search-phase hot spot (paper Eq. 5): W_hat = sum_p gamma_hat[:, p] *
+Q_p(W). A naive implementation reads/writes W once per precision (|P_W|
+quantize passes + a weighted sum: ~2|P|+1 HBM round trips of W). This kernel
+computes all precisions from a single VMEM-resident tile: 1 read + 1 write.
+
+Tiling: W is blocked (BM x BK) with BM on the output-channel axis; the
+per-channel absmax (precomputed, BM x 1) and selection probabilities
+(BM x |P|) ride along the row axis. All shapes are padded to (8, 128)
+multiples by ops.py so MXU/VPU lanes stay aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+
+
+def _combine_kernel(w_ref, absmax_ref, probs_ref, out_ref, *, precisions):
+    w = w_ref[...]                       # (BM, BK)
+    absmax = absmax_ref[...]             # (BM, 1)
+    probs = probs_ref[...]               # (BM, |P|)
+    acc = jnp.zeros_like(w)
+    for idx, bits in enumerate(precisions):
+        if bits == 0:
+            continue                     # 0-bit variant contributes zeros
+        qmax = float(2 ** (bits - 1) - 1)
+        scale = jnp.maximum(absmax, 1e-8) / qmax
+        q = jnp.clip(jnp.round(w / scale), -qmax, qmax) * scale
+        acc = acc + probs[:, idx:idx + 1] * q
+    out_ref[...] = acc
+
+
+def mps_combine_fwd(w: jax.Array, absmax: jax.Array, probs: jax.Array,
+                    precisions: tuple[int, ...], *, bm: int = DEFAULT_BM,
+                    bk: int = DEFAULT_BK, interpret: bool = True
+                    ) -> jax.Array:
+    """w: (M, K) padded; absmax: (M, 1); probs: (M, |P|). Returns (M, K)."""
+    m, k = w.shape
+    n_p = probs.shape[-1]
+    bm = min(bm, m)
+    bk = min(bk, k)
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, precisions=tuple(precisions)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, n_p), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), w.dtype),
+        interpret=interpret,
+    )(w, absmax, probs)

@@ -1,0 +1,82 @@
+"""Jitted wrapper around the mps_combine kernel with a custom VJP.
+
+Forward: Pallas kernel (interpret=True on CPU, compiled on TPU).
+Backward: straight-through-estimator gradients in plain jnp --
+  dL/dW[i,k]   = g[i,k] * sum_p probs[i,p] * 1{|W/s_p| <= qmax_p}  (STE)
+  dL/dprobs[i,p] = sum_k g[i,k] * Q_p(W)[i,k]
+(the per-channel min-max scale is treated as a constant, as in
+repro.core.quantizers.quantize_weights_symmetric).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mps_combine import kernel as _k
+from repro.kernels.mps_combine import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def mps_combine(w: jax.Array, probs: jax.Array,
+                precisions: tuple[int, ...]) -> jax.Array:
+    """Effective weight sum_p probs[:, p] * Q_p(w). w: (M, K) f32."""
+    return _fwd_impl(w, probs, precisions)
+
+
+def _fwd_impl(w, probs, precisions):
+    m, k = w.shape
+    absmax = jnp.max(jnp.abs(w), axis=1, keepdims=True)
+    bm = min(_k.DEFAULT_BM, max(8, m))
+    bk = min(_k.DEFAULT_BK, max(128, k))
+    wp = _pad_to(_pad_to(w, bm, 0), bk, 1)
+    ap = _pad_to(absmax, bm, 0)
+    pp = _pad_to(probs, bm, 0)
+    out = _k.mps_combine_fwd(wp, ap, pp, precisions, bm=bm, bk=bk,
+                             interpret=not _on_tpu())
+    return out[:m, :k]
+
+
+def _vjp_fwd(w, probs, precisions):
+    return _fwd_impl(w, probs, precisions), (w, probs)
+
+
+def _vjp_bwd(precisions, res, g):
+    w, probs = res
+    absmax = jnp.max(jnp.abs(w), axis=1, keepdims=True)
+    dw = jnp.zeros_like(w)
+    dprobs_cols = []
+    for idx, bits in enumerate(precisions):
+        if bits == 0:
+            dprobs_cols.append(jnp.zeros(w.shape[0], w.dtype))
+            continue
+        qmax = float(2 ** (bits - 1) - 1)
+        scale = jnp.maximum(absmax, 1e-8) / qmax
+        ratio = w / scale
+        # match jnp.clip's tie-splitting convention: gradient 0.5 exactly
+        # on the clip boundary (each row's absmax element lands there)
+        inside = (jnp.abs(ratio) < qmax).astype(w.dtype) \
+            + 0.5 * (jnp.abs(ratio) == qmax).astype(w.dtype)
+        q = jnp.clip(jnp.round(ratio), -qmax, qmax) * scale
+        dw = dw + probs[:, idx:idx + 1] * inside * g
+        dprobs_cols.append(jnp.sum(g * q, axis=1))
+    return dw, jnp.stack(dprobs_cols, axis=-1)
+
+
+mps_combine.defvjp(_vjp_fwd, _vjp_bwd)
+
+mps_combine_ref = _ref.mps_combine_ref

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the mps_combine kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mps_combine_ref(w: jax.Array, probs: jax.Array,
+                    precisions: tuple[int, ...]) -> jax.Array:
+    """w: (M, K); probs: (M, |P|) rows summing to 1. Matches
+    repro.core.mps.effective_weight with channel_axis=0 (given probs)."""
+    absmax = jnp.max(jnp.abs(w), axis=1, keepdims=True)
+    acc = jnp.zeros_like(w)
+    for idx, bits in enumerate(precisions):
+        if bits == 0:
+            continue
+        qmax = float(2 ** (bits - 1) - 1)
+        scale = jnp.maximum(absmax, 1e-8) / qmax
+        q = jnp.clip(jnp.round(w / scale), -qmax, qmax) * scale
+        acc = acc + probs[:, idx:idx + 1] * q
+    return acc

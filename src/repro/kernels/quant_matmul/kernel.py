@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: int8 x int8 tiled matmul with fused per-channel dequant.
+
+Serving path for the discretized models (paper Sec. 4.5 / Fig. 3): after
+channel reordering, each layer is a set of dense per-precision sub-matmuls.
+Sub-8-bit weights are stored bit-packed in int8 words and unpacked in-kernel
+(bandwidth win; the MXU computes at int8 regardless -- see DESIGN.md
+"hardware adaptation").
+
+Y[m, n] = (sum_k Xq[m, k] * Wq[n, k]) * sx * sw[n]
+
+Grid: (M/BM, N/BN, K/BK); K is the innermost (sequential) axis, accumulated
+in an f32 VMEM scratch-free accumulator held in the output block (int32
+partials fit f32 exactly: 127*127*BK < 2^24 for BK <= 1024).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _qmm_kernel(x_ref, w_ref, sw_ref, sx_ref, out_ref, *, nk: int,
+                w_bits: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (BM, BK)
+    w = w_ref[...]                                # (BN, BK') packed int8
+    w = _unpack(w, w_bits).astype(jnp.float32)    # (BN, BK)
+    out_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        sw = sw_ref[...]                          # (1, BN)
+        sx = sx_ref[0, 0]
+        out_ref[...] = out_ref[...] * sw * sx
+
+
+def _unpack(w: jax.Array, bits: int) -> jax.Array:
+    """Unpack 8/4/2-bit signed values stored little-endian in int8 words."""
+    if bits == 8:
+        return w
+    per = 8 // bits
+    w_u = w.astype(jnp.uint8)
+    parts = []
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    for i in range(per):
+        v = (w_u >> (bits * i)) & mask
+        v = v.astype(jnp.int32)
+        v = jnp.where(v >= sign, v - (1 << bits), v)  # sign-extend
+        parts.append(v.astype(jnp.int8))
+    # (BN, BK/per, per) -> (BN, BK)
+    return jnp.stack(parts, axis=-1).reshape(w.shape[0], -1)
+
+
+def quant_matmul_fwd(xq: jax.Array, wq_packed: jax.Array, sw: jax.Array,
+                     sx: jax.Array, *, w_bits: int = 8,
+                     bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                     bk: int = DEFAULT_BK, interpret: bool = True
+                     ) -> jax.Array:
+    """xq: (M, K) int8; wq_packed: (N, K*bits/8) int8; sw: (1, N) f32;
+    sx: (1, 1) f32. Shapes must already be tile-aligned."""
+    m, k = xq.shape
+    n = wq_packed.shape[0]
+    per = 8 // w_bits
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=nk, w_bits=w_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // per), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(xq, wq_packed, sw, sx)

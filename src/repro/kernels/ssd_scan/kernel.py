@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: Mamba-2 SSD inter-chunk state recurrence.
+
+The chunked SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence
+into chunks; intra-chunk terms are dense matmuls (MXU-friendly, left to
+XLA), while the inter-chunk state pass is the sequential, memory-bound part:
+
+    prefix[c] = state before chunk c
+    state     = decay[c] * state + S_in[c],        state(init) = S0
+
+with S in (C, H, P, N) -- chunks x heads x head_dim x state_dim -- and decay
+(C, H). On TPU the grid's last axis executes sequentially and revisited
+output blocks stay resident, so the running state is carried in the `final`
+output block (no HBM round-trip per chunk); each head-tile streams chunk
+contributions through VMEM exactly once.
+
+Grid: (H/BH, C) -- C innermost/sequential.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BH = 8
+
+
+def _ssd_kernel(dec_ref, s_ref, init_ref, prefix_ref, final_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        final_ref[...] = init_ref[...]        # (BH, P, N) carry := S0
+
+    prefix_ref[0] = final_ref[...]            # state before chunk c
+    dec = dec_ref[...][0, :, None, None]      # (BH, 1, 1)
+    final_ref[...] = dec * final_ref[...] + s_ref[0]
+
+
+def ssd_scan_fwd(decay: jax.Array, s_in: jax.Array, s0: jax.Array, *,
+                 bh: int = DEFAULT_BH, interpret: bool = True):
+    """decay: (C, H); s_in: (C, H, P, N); s0: (H, P, N).
+
+    Returns (prefix_states (C, H, P, N), final_state (H, P, N)).
+    """
+    c, h = decay.shape
+    p, n = s_in.shape[2], s_in.shape[3]
+    bh = min(bh, h)
+    grid = (h // bh, c)
+    prefix, final = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bh), lambda i, cc: (cc, i)),
+            pl.BlockSpec((1, bh, p, n), lambda i, cc: (cc, i, 0, 0)),
+            pl.BlockSpec((bh, p, n), lambda i, cc: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bh, p, n), lambda i, cc: (cc, i, 0, 0)),
+            pl.BlockSpec((bh, p, n), lambda i, cc: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, h, p, n), s_in.dtype),
+            jax.ShapeDtypeStruct((h, p, n), s_in.dtype),
+        ],
+        interpret=interpret,
+    )(decay, s_in, s0)
+    return prefix, final

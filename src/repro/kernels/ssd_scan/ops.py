@@ -1,0 +1,34 @@
+"""Jitted wrapper for the SSD inter-chunk scan (backend dispatch + padding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as _k
+from repro.kernels.ssd_scan import ref as _ref
+
+ssd_scan_ref = _ref.ssd_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_scan(decay: jax.Array, s_in: jax.Array, s0: jax.Array,
+             use_kernel: bool | None = None):
+    """Inter-chunk SSD state pass. See kernel.py for semantics.
+
+    ``use_kernel=None`` -> Pallas on TPU, lax.scan reference on CPU (the
+    interpret-mode kernel is functionally identical but Python-slow; tests
+    exercise it explicitly).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return _ref.ssd_scan_ref(decay, s_in, s0)
+    h = decay.shape[1]
+    bh = _k.DEFAULT_BH
+    if h % bh != 0:
+        bh = 1
+    return _k.ssd_scan_fwd(decay, s_in, s0, bh=bh,
+                           interpret=not _on_tpu())

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the ssd_scan kernel (lax.scan over chunks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(decay: jax.Array, s_in: jax.Array, s0: jax.Array):
+    """decay: (C, H); s_in: (C, H, P, N); s0: (H, P, N).
+    Returns (prefix_states (C, H, P, N), final_state (H, P, N))."""
+
+    def step(state, inputs):
+        dec, s = inputs                      # (H,), (H, P, N)
+        prefix = state
+        new_state = dec[:, None, None] * state + s
+        return new_state, prefix
+
+    final, prefixes = jax.lax.scan(step, s0, (decay, s_in))
+    return prefixes, final

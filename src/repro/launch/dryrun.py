@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract the roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above has to execute
+before jax initializes):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k [--multi-pod] [--search]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>[__search].json
+"""
+import argparse        # noqa: E402
+import json            # noqa: E402
+import sys             # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.configs import registry                      # noqa: E402
+from repro.configs.base import SHAPES, cell_applicable  # noqa: E402
+from repro.distributed import hlo_analysis, sharding    # noqa: E402
+from repro.launch import mesh as meshlib                # noqa: E402
+from repro.launch import steps as steps_lib             # noqa: E402
+from repro.models import lm                             # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             search: bool = False, verbose: bool = True) -> dict:
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "search": search}
+    if not ok:
+        rec["skipped"] = reason
+        return rec
+    t0 = time.time()
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    rules = dict(registry.RULE_OVERRIDES.get(arch, {}))
+    rules.update(steps_lib.shape_rules(shape))
+    try:
+        with sharding.use_mesh(mesh, rules):
+            step, args, in_sh, out_sh, donate = steps_lib.cell_artifacts(
+                cfg, shape, mesh, search=search)
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+                "peak_bytes_est":
+                    getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)
+                    - getattr(mem, "alias_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0),
+            }
+        except Exception as e:  # backend without memory analysis
+            mem_rec = {"error": str(e)}
+        hlo = compiled.as_text()
+        _save_hlo(arch, shape_name, multi_pod, search, hlo)
+        totals = hlo_analysis.analyze(hlo)
+        n_dev = mesh.devices.size
+        roof = hlo_analysis.Roofline(
+            flops_per_device=totals.flops,
+            bytes_per_device=totals.bytes,
+            collective_bytes=totals.collective_traffic_bytes,
+            n_devices=n_dev,
+            dot_bytes_per_device=totals.dot_bytes)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+            "memory_analysis": mem_rec,
+            "collectives": {
+                "bytes_by_kind": totals.coll_bytes,
+                "count_by_kind": totals.coll_counts,
+                "traffic_bytes": totals.collective_traffic_bytes,
+            },
+            "roofline": roof.as_dict(),
+            "hlo_lines": len(hlo.splitlines()),
+        })
+        if verbose:
+            r = rec["roofline"]
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}"
+                  f"{' [search]' if search else ''}: compile ok in "
+                  f"{t_compile:.1f}s | compute {r['compute_s']:.4f}s "
+                  f"memory {r['memory_s']:.4f}s collective "
+                  f"{r['collective_s']:.4f}s -> {r['dominant']}-bound")
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']} FAILED: "
+                  f"{rec['error']}")
+    return rec
+
+
+def artifact_path(out_dir, arch, shape_name, multi_pod, search):
+    tag = "2x16x16" if multi_pod else "16x16"
+    sfx = "__search" if search else ""
+    return os.path.join(out_dir, f"{arch}__{shape_name}__{tag}{sfx}.json")
+
+
+HLO_DIR = "artifacts/hlo"
+
+
+def _hlo_path(arch, shape_name, multi_pod, search):
+    tag = "2x16x16" if multi_pod else "16x16"
+    sfx = "__search" if search else ""
+    return os.path.join(HLO_DIR, f"{arch}__{shape_name}__{tag}{sfx}.hlo.zst")
+
+
+def _save_hlo(arch, shape_name, multi_pod, search, text: str):
+    """Persist the compiled per-device HLO (zstd) so the roofline can be
+    re-analyzed without recompiling."""
+    import zstandard
+    os.makedirs(HLO_DIR, exist_ok=True)
+    with open(_hlo_path(arch, shape_name, multi_pod, search), "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=9).compress(
+            text.encode()))
+
+
+def load_hlo(arch, shape_name, multi_pod, search=False) -> str:
+    import zstandard
+    with open(_hlo_path(arch, shape_name, multi_pod, search), "rb") as f:
+        return zstandard.ZstdDecompressor().decompress(f.read()).decode()
+
+
+def reanalyze(out_dir: str):
+    """Recompute analyzer-derived fields of every artifact from stored
+    HLO (no recompilation)."""
+    for fname in sorted(os.listdir(out_dir)):
+        if not fname.endswith(".json"):
+            continue
+        path = os.path.join(out_dir, fname)
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            continue
+        mp = rec["mesh"] == "2x16x16"
+        try:
+            hlo = load_hlo(rec["arch"], rec["shape"], mp,
+                           rec.get("search", False))
+        except FileNotFoundError:
+            print(f"[reanalyze] no HLO for {fname}")
+            continue
+        totals = hlo_analysis.analyze(hlo)
+        n_dev = 512 if mp else 256
+        roof = hlo_analysis.Roofline(
+            flops_per_device=totals.flops,
+            bytes_per_device=totals.bytes,
+            collective_bytes=totals.collective_traffic_bytes,
+            n_devices=n_dev,
+            dot_bytes_per_device=totals.dot_bytes)
+        rec["collectives"] = {
+            "bytes_by_kind": totals.coll_bytes,
+            "count_by_kind": totals.coll_counts,
+            "traffic_bytes": totals.collective_traffic_bytes}
+        rec["roofline"] = roof.as_dict()
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        print(f"[reanalyze] {fname}: {roof.dominant}-bound")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--search", action="store_true",
+                    help="lower the paper's joint MPS+pruning search step")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute analyses from stored HLO, no compile")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    if args.reanalyze:
+        reanalyze(args.out)
+        return
+
+    cells = []
+    if args.all:
+        for arch in registry.ARCHS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name, False, False))
+                cells.append((arch, shape_name, True, False))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.multi_pod, args.search))
+
+    n_fail = 0
+    for arch, shape_name, mp, search in cells:
+        path = artifact_path(args.out, arch, shape_name, mp, search)
+        if args.skip_existing and os.path.exists(path):
+            continue
+        rec = run_cell(arch, shape_name, multi_pod=mp, search=search)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        if rec.get("ok") is False:
+            n_fail += 1
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

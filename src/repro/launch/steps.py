@@ -1,0 +1,195 @@
+"""train_step / serve_step factories shared by the real launcher and the
+multi-pod dry-run. Also builds the ShapeDtypeStruct input specs and the
+NamedShardings for every (arch x shape) cell."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import mps
+from repro.distributed import sharding
+from repro.models import lm
+from repro.optim import grad as gradlib
+from repro.optim import optimizers
+
+
+_IS_AXES = lambda x: isinstance(x, tuple)  # logical-axes leaves  # noqa: E731
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt: optimizers.Optimizer,
+                    search: bool = False, lam: float = 1e-9,
+                    clip_norm: float = 1.0):
+    """(params, opt_state, batch, step) -> (params, opt_state, loss).
+
+    search=True runs the paper's joint MPS+pruning objective: effective
+    weights from the per-channel selection parameters + lambda * size cost.
+    """
+
+    def loss_of(params, batch):
+        ctx = mps.SearchCtx(tau=1.0) if search else None
+        return lm.loss_fn(cfg, params, batch, ctx=ctx,
+                          lam=lam if search else 0.0)
+
+    k = max(cfg.train_microbatches, 1)
+
+    def step_fn(params, opt_state, batch, step):
+        if k == 1:
+            loss_val, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            # gradient accumulation over k microbatches (lax.scan keeps one
+            # microbatch's activations live at a time -> peak memory / k,
+            # at the cost of k weight-gather passes; Perf iteration 5)
+            micro = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                acc_g, acc_l = acc
+                g = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                 acc_g, g)
+                return (g, acc_l + l), None
+
+            # accumulate in the parameter dtype: bf16-master models keep
+            # bf16 accumulators (halves the carried gradient memory)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss_val = loss_sum / k
+        grads, _ = gradlib.clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, loss_val
+
+    return step_fn
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def step_fn(params, batch):
+        logits, caches = lm.forward(cfg, params, batch, mode="prefill",
+                                    logits_mode="last")
+        return logits, caches
+    return step_fn
+
+
+def make_decode_step(cfg: ArchConfig):
+    def step_fn(params, token_batch, caches, pos):
+        return lm.decode_step(cfg, params, token_batch, caches, pos)
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def shape_rules(shape: ShapeConfig) -> dict:
+    """Per-shape sharding rule overrides (see DESIGN.md Sec. 5)."""
+    if shape.kind == "train":
+        return {"act_seq": "model"}
+    if shape.kind == "prefill":
+        return {"act_seq": "model", "kv_seq": "model"}
+    # decode
+    if shape.global_batch == 1:      # long-context: shard the KV sequence
+        return {"batch": None, "act_seq": None,
+                "kv_seq": ("pod", "data", "model")}
+    return {"act_seq": None, "kv_seq": "model"}
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig):
+    """Abstract model inputs for one step of the given kind."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        tok = {"tokens": sds((b, 1), jnp.int32)}
+        if cfg.frontend != "none":
+            tok = {"embeddings": sds((b, 1, cfg.d_model), jnp.bfloat16)}
+        return tok
+    batch = {}
+    if cfg.frontend == "none":
+        batch["tokens"] = sds((b, s), jnp.int32)
+    else:  # precomputed patch/frame embeddings (stub frontend)
+        batch["embeddings"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        batch["enc_embeddings"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    if shape.kind == "train":
+        batch["targets"] = sds((b, s), jnp.int32)
+    return batch
+
+
+def batch_logical(cfg: ArchConfig, shape: ShapeConfig):
+    out = {}
+    if shape.kind == "decode":
+        key = "tokens" if cfg.frontend == "none" else "embeddings"
+        out[key] = ("batch", None) if key == "tokens" else \
+            ("batch", None, None)
+        return out
+    if cfg.frontend == "none":
+        out["tokens"] = ("batch", None)
+    else:
+        out["embeddings"] = ("batch", None, None)
+    if cfg.is_encdec:
+        out["enc_embeddings"] = ("batch", None, None)
+    if shape.kind == "train":
+        out["targets"] = ("batch", None)
+    return out
+
+
+def resolve_shardings(mesh, logical_tree):
+    """logical tree (tuple leaves) -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, sharding.spec(*l)),
+        logical_tree, is_leaf=_IS_AXES)
+
+
+def cell_artifacts(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                   search: bool = False):
+    """Everything needed to lower one (arch x shape) cell under `mesh`
+    (call inside sharding.use_mesh): abstract args, shardings, step fn."""
+    params_abs = lm.abstract_params(cfg, mps_on=search)
+    params_log = lm.logical_axes(cfg, mps_on=search)
+    params_sh = resolve_shardings(mesh, params_log)
+    b_abs = batch_struct(cfg, shape)
+    b_sh = resolve_shardings(mesh, batch_logical(cfg, shape))
+
+    if shape.kind == "train":
+        opt = optimizers.make_optimizer(cfg.optimizer, 1e-4)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_log = optimizers.state_logical_axes(cfg.optimizer, params_log)
+        opt_sh = resolve_shardings(mesh, opt_log)
+        step = make_train_step(cfg, opt, search=search)
+        args = (params_abs, opt_abs, b_abs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (params_sh, opt_sh, b_sh, NamedSharding(mesh, P()))
+        out_sh = (params_sh, opt_sh, NamedSharding(mesh, P()))
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        args = (params_abs, b_abs)
+        in_sh = (params_sh, b_sh)
+        logits_sh = NamedSharding(mesh, sharding.spec("batch", None,
+                                                      "vocab"))
+        cache_sh = resolve_shardings(mesh, lm.cache_logical_axes(cfg))
+        out_sh = (logits_sh, cache_sh)
+        donate = ()
+    else:  # decode
+        step = make_decode_step(cfg)
+        caches_abs = lm.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                    enc_len=shape.seq_len, abstract=True)
+        cache_sh = resolve_shardings(mesh, lm.cache_logical_axes(cfg))
+        args = (params_abs, b_abs, caches_abs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (params_sh, b_sh, cache_sh, NamedSharding(mesh, P()))
+        logits_sh = NamedSharding(mesh, sharding.spec("batch", None,
+                                                      "vocab"))
+        out_sh = (logits_sh, cache_sh)
+        donate = (2,)
+    return step, args, in_sh, out_sh, donate

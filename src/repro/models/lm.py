@@ -1,0 +1,608 @@
+"""Generic LM covering all 10 assigned architectures.
+
+One decoder implementation parameterized by ArchConfig:
+  * layer "super-block" patterns (dense, local/global, chunked+MoE, jamba
+    1:7 mamba:attn with alternating MoE, pure SSM, enc-dec)
+  * jax.lax.scan over super-blocks (HLO size independent of depth) with
+    optional remat
+  * the paper's channel-wise MPS + pruning as a first-class mode: every
+    projection weight can carry per-output-channel bit-width selection
+    parameters; mode="search" computes effective weights (Eq. 5) and the
+    differentiable size cost
+
+Entry points:
+  init_params(cfg, key)          -> params pytree (use jax.eval_shape for
+                                    the dry-run; real init for training)
+  logical_axes(cfg)              -> same-structure pytree of logical axis
+                                    tuples (resolved via sharding.spec)
+  loss_fn / prefill / decode_step
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import mps, sampling
+from repro.distributed import sharding
+from repro.nn import blocks
+
+
+# ---------------------------------------------------------------------------
+# layer patterns
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str           # attn | attn_local | attn_chunked | attn_bidir | mamba
+    ffn: Optional[str]   # dense | moe | None
+    cross: bool = False
+
+
+def block_pattern(cfg: ArchConfig) -> tuple[LayerSpec, ...]:
+    """Decoder super-block pattern; n_layers % len(pattern) == 0."""
+    if cfg.is_hybrid:  # jamba: 1:7 attn:mamba, MoE every other layer
+        out = []
+        for i in range(cfg.attn_every):
+            mixer = "attn" if i == cfg.attn_every // 2 else "mamba"
+            ffn = "moe" if (i % 2 == 1) else "dense"
+            out.append(LayerSpec(mixer, ffn))
+        return tuple(out)
+    if cfg.is_ssm:
+        return (LayerSpec("mamba", None),)
+    if cfg.attn_pattern == "local_global":
+        return (LayerSpec("attn_local", "dense"), LayerSpec("attn", "dense"))
+    if cfg.attn_pattern == "chunked":
+        ffn = "moe" if cfg.is_moe else "dense"
+        return (LayerSpec("attn_chunked", ffn),) * 3 + (LayerSpec("attn",
+                                                                  ffn),)
+    ffn = "moe" if cfg.is_moe else "dense"
+    if cfg.is_moe and cfg.moe_every > 1:
+        return tuple(LayerSpec("attn", "moe" if i % cfg.moe_every ==
+                               cfg.moe_every - 1 else "dense")
+                     for i in range(cfg.moe_every))
+    return (LayerSpec("attn", ffn, cross=cfg.is_encdec),)
+
+
+def enc_pattern(cfg: ArchConfig) -> tuple[LayerSpec, ...]:
+    return (LayerSpec("attn_bidir", "dense"),)
+
+
+def n_superblocks(cfg: ArchConfig) -> int:
+    pat = block_pattern(cfg)
+    assert cfg.n_layers % len(pat) == 0, (cfg.name, len(pat))
+    return cfg.n_layers // len(pat)
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return -(-cfg.vocab // 256) * 256
+
+
+# ---------------------------------------------------------------------------
+# init (params + logical axes, same traversal)
+# ---------------------------------------------------------------------------
+
+class _Builder:
+    def __init__(self, key, dtype, mps_on: bool, precisions):
+        self.key = key
+        self.dtype = dtype
+        self.mps_on = mps_on
+        self.precisions = precisions
+        self.counter = 0
+
+    def w(self, shape, logical, scale=None, mps_ok=True, stack=None):
+        """A linear weight {'w': arr[, 'gamma': ...]} with logical axes."""
+        self.counter += 1
+        k = jax.random.fold_in(self.key, self.counter)
+        fan_in = shape[0] if len(shape) == 2 else shape[-2]
+        scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        full = (stack,) + shape if stack else shape
+        llog = (("layers",) + tuple(logical)) if stack else tuple(logical)
+        arr = jax.random.normal(k, full, self.dtype) * scale
+        out = {"w": arr}
+        log = {"w": llog}
+        if self.mps_on and mps_ok:
+            c_out = shape[-1]
+            g = sampling.init_selection_logits(self.precisions, (c_out,))
+            if stack:
+                g = jnp.broadcast_to(g, (stack,) + g.shape).copy()
+            out["gamma"] = g.astype(jnp.float32)
+            log["gamma"] = (("layers",) if stack else ()) + (None, None)
+        return out, log
+
+    def vec(self, shape, logical, init=0.0, stack=None):
+        full = (stack,) + shape if stack else shape
+        llog = (("layers",) + tuple(logical)) if stack else tuple(logical)
+        return jnp.full(full, init, self.dtype), llog
+
+
+def _attn_params(b: _Builder, cfg: ArchConfig, nsb: int):
+    h, hkv, hd, d = cfg.h_eff, cfg.hkv_eff, cfg.head_dim, cfg.d_model
+    p, l = {}, {}
+    p["wq"], l["wq"] = b.w((d, h * hd), ("w_embed", "heads_flat"), stack=nsb)
+    p["wk"], l["wk"] = b.w((d, hkv * hd), ("w_embed", "kv_flat"), stack=nsb)
+    p["wv"], l["wv"] = b.w((d, hkv * hd), ("w_embed", "kv_flat"), stack=nsb)
+    p["wo"], l["wo"] = b.w((h * hd, d), ("heads_flat", "w_embed"), stack=nsb)
+    if cfg.qk_norm:
+        p["q_norm"], l["q_norm"] = b.vec((hd,), (None,), 0.0, stack=nsb)
+        p["k_norm"], l["k_norm"] = b.vec((hd,), (None,), 0.0, stack=nsb)
+    return p, l
+
+
+def _ffn_params(b: _Builder, cfg: ArchConfig, nsb: int, d_ff: int):
+    d = cfg.d_model
+    p, l = {}, {}
+    p["w_gate"], l["w_gate"] = b.w((d, d_ff), ("w_embed", "mlp"), stack=nsb)
+    p["w_up"], l["w_up"] = b.w((d, d_ff), ("w_embed", "mlp"), stack=nsb)
+    p["w_down"], l["w_down"] = b.w((d_ff, d), ("mlp", "w_embed"), stack=nsb)
+    return p, l
+
+
+def _moe_params(b: _Builder, cfg: ArchConfig, nsb: int):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    p, l = {}, {}
+    rp, rl = b.w((d, e), (None, None), mps_ok=False, stack=nsb)
+    p["router"], l["router"] = rp, rl
+    p["w_gate"], l["w_gate"] = b.w((e, d, f),
+                                   ("experts", "w_embed", None), stack=nsb)
+    p["w_up"], l["w_up"] = b.w((e, d, f),
+                               ("experts", "w_embed", None), stack=nsb)
+    p["w_down"], l["w_down"] = b.w((e, f, d),
+                                   ("experts", None, "w_embed"), stack=nsb)
+    if cfg.dense_residual:
+        sp, sl = _ffn_params(b, cfg, nsb, cfg.d_ff)
+        p["shared"], l["shared"] = sp, sl
+    return p, l
+
+
+def _mamba_params(b: _Builder, cfg: ArchConfig, nsb: int):
+    d, di, n, h, kk = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.ssm_conv)
+    p, l = {}, {}
+    p["in_z"], l["in_z"] = b.w((d, di), ("w_embed", "ssm_inner"), stack=nsb)
+    p["in_x"], l["in_x"] = b.w((d, di), ("w_embed", "ssm_inner"), stack=nsb)
+    p["in_b"], l["in_b"] = b.w((d, n), ("w_embed", None), stack=nsb)
+    p["in_c"], l["in_c"] = b.w((d, n), ("w_embed", None), stack=nsb)
+    p["in_dt"], l["in_dt"] = b.w((d, h), ("w_embed", None), stack=nsb)
+    p["out_proj"], l["out_proj"] = b.w((di, d), ("ssm_inner", "w_embed"),
+                                       stack=nsb)
+    p["conv_x"], l["conv_x"] = b.vec((kk, di), (None, "ssm_inner"), 0.1,
+                                     stack=nsb)
+    p["conv_b"], l["conv_b"] = b.vec((kk, n), (None, None), 0.1, stack=nsb)
+    p["conv_c"], l["conv_c"] = b.vec((kk, n), (None, None), 0.1, stack=nsb)
+    p["dt_bias"], l["dt_bias"] = b.vec((h,), (None,), 0.0, stack=nsb)
+    p["a_log"], l["a_log"] = b.vec((h,), (None,), 0.0, stack=nsb)
+    p["d_skip"], l["d_skip"] = b.vec((h,), (None,), 1.0, stack=nsb)
+    p["ssm_norm"], l["ssm_norm"] = b.vec((di,), ("ssm_inner",), 0.0,
+                                         stack=nsb)
+    return p, l
+
+
+def _layer_params(b: _Builder, cfg: ArchConfig, spec: LayerSpec, nsb: int):
+    d = cfg.d_model
+    p, l = {}, {}
+    p["norm1"], l["norm1"] = b.vec((d,), (None,), 0.0, stack=nsb)
+    if spec.mixer == "mamba":
+        p["mixer"], l["mixer"] = _mamba_params(b, cfg, nsb)
+    else:
+        p["mixer"], l["mixer"] = _attn_params(b, cfg, nsb)
+    if spec.cross:
+        p["norm_cross"], l["norm_cross"] = b.vec((d,), (None,), 0.0,
+                                                 stack=nsb)
+        p["cross"], l["cross"] = _attn_params(b, cfg, nsb)
+    if spec.ffn is not None:
+        p["norm2"], l["norm2"] = b.vec((d,), (None,), 0.0, stack=nsb)
+        if spec.ffn == "moe":
+            p["ffn"], l["ffn"] = _moe_params(b, cfg, nsb)
+        else:
+            p["ffn"], l["ffn"] = _ffn_params(b, cfg, nsb, cfg.d_ff)
+    return p, l
+
+
+def _build(cfg: ArchConfig, key, mps_on: bool):
+    dtype = jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16
+    b = _Builder(key, dtype, mps_on, cfg.mps_precisions)
+    nsb = n_superblocks(cfg)
+    v = padded_vocab(cfg)
+    d = cfg.d_model
+    params, logical = {}, {}
+    params["embed"], logical["embed"] = b.w(
+        (v, d), ("vocab", "w_embed"), scale=0.02, mps_ok=False)
+    pat = block_pattern(cfg)
+    bp, bl = {}, {}
+    for i, spec in enumerate(pat):
+        bp[f"l{i}"], bl[f"l{i}"] = _layer_params(b, cfg, spec, nsb)
+    params["blocks"], logical["blocks"] = bp, bl
+    params["final_norm"], logical["final_norm"] = b.vec((d,), (None,), 0.0)
+    params["lm_head"], logical["lm_head"] = b.w(
+        (d, v), ("w_embed", "vocab"), scale=0.02, mps_ok=False)
+    if cfg.is_encdec:
+        ep, el = {}, {}
+        epat = enc_pattern(cfg)
+        n_enc_sb = cfg.enc_layers // len(epat)
+        for i, spec in enumerate(epat):
+            ep[f"l{i}"], el[f"l{i}"] = _layer_params(b, cfg, spec, n_enc_sb)
+        params["enc_blocks"], logical["enc_blocks"] = ep, el
+        params["enc_norm"], logical["enc_norm"] = b.vec((d,), (None,), 0.0)
+    return params, logical
+
+
+def init_params(cfg: ArchConfig, key, mps_on: bool = False):
+    return _build(cfg, key, mps_on)[0]
+
+
+def logical_axes(cfg: ArchConfig, mps_on: bool = False):
+    captured = {}
+
+    def f(k):
+        p, l = _build(cfg, k, mps_on)
+        captured["l"] = l
+        return p
+
+    jax.eval_shape(f, jax.random.key(0))
+    return captured["l"]
+
+
+def abstract_params(cfg: ArchConfig, mps_on: bool = False):
+    return jax.eval_shape(lambda k: _build(cfg, k, mps_on)[0],
+                          jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _make_effective_w(ctx: Optional[mps.SearchCtx], precisions):
+    """Weight-fetch hook. Always casts to the bf16 compute dtype AT THE
+    POINT OF USE: the cast output inherits the (FSDP-sharded) layout, so
+    the per-layer all-gather moves bf16 instead of the f32 master -- this
+    halves the dominant weight-gather collective bytes and the gathered-
+    weight memory for f32-master architectures (Perf iteration 4)."""
+    if ctx is None:
+        def getw(pp):
+            return pp["w"].astype(jnp.bfloat16)
+        return getw
+
+    def getw(pp):
+        w = pp["w"]
+        if "gamma" not in pp:
+            return w.astype(jnp.bfloat16)
+        return mps.effective_weight(
+            w.astype(jnp.float32), pp["gamma"], precisions, ctx,
+            channel_axis=w.ndim - 1).astype(jnp.bfloat16)
+    return getw
+
+
+def _layer_apply(cfg, spec: LayerSpec, p, x, *, mode, cache, pos,
+                 enc_out, getw):
+    if getw is None:
+        getw = _make_effective_w(None, cfg.mps_precisions)
+    mixer_kind = {"attn": "full", "attn_local": "local",
+                  "attn_chunked": "chunked", "attn_bidir": "bidir"}
+    new_cache = {}
+    h = blocks.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer == "mamba":
+        amode = mode if mode != "train" else "train"
+        y, st = blocks.mamba2_layer(
+            p["mixer"], h, cfg, mode=amode,
+            state=None if cache is None else cache.get("mamba"),
+            effective_w=getw)
+        if st is not None:
+            new_cache["mamba"] = st
+    else:
+        y, kv = blocks.attention_layer(
+            p["mixer"], h, cfg, kind=mixer_kind[spec.mixer],
+            mode=("train" if mode == "train" else mode),
+            cache=None if cache is None else cache.get("kv"),
+            pos=pos, effective_w=getw)
+        if kv is not None:
+            new_cache["kv"] = kv
+    x = x + y
+    if spec.cross and enc_out is not None:
+        hc = blocks.rmsnorm(x, p["norm_cross"], cfg.norm_eps)
+        yc, ckv = blocks.attention_layer(
+            p["cross"], hc, cfg, kind="cross",
+            mode=("train" if mode == "train" else mode),
+            cache=None if cache is None else cache.get("cross_kv"),
+            pos=pos, kv_input=enc_out)
+        if ckv is not None:
+            new_cache["cross_kv"] = ckv
+        x = x + yc
+    if spec.ffn is not None:
+        h2 = blocks.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            y2 = blocks.moe_layer(p["ffn"], h2, cfg, effective_w=getw)
+        else:
+            y2 = blocks.ffn_swiglu(p["ffn"], h2, effective_w=getw)
+        x = x + y2
+    return x, (new_cache or None)
+
+
+def _run_stack(cfg, pattern, stack_params, x, *, mode, caches, pos,
+               enc_out, getw, remat: bool, blk_logical=None):
+    """scan over super-blocks. caches: pytree stacked on axis 0 or None.
+
+    blk_logical: logical-axis tree matching one *sliced* block (leading
+    'layers' axis stripped). Constraining the sliced weights inside the
+    body keeps them FSDP-sharded after the scan's dynamic-slice, so the
+    per-layer all-gather stays INSIDE the loop -- without this, GSPMD
+    hoists the resharding of the whole stacked parameter out of the loop
+    and materializes every layer's gathered weights at once (165 GiB/dev
+    for jamba-398B; see EXPERIMENTS.md Sec-Perf iteration 0).
+    """
+    _is_axes = lambda v: isinstance(v, tuple)  # noqa: E731
+
+    def block_fn(carry, xs):
+        xv = carry
+        in_dtype = xv.dtype
+        blk_params, blk_cache = xs
+        if blk_logical is not None and sharding.get_mesh() is not None:
+            blk_params = jax.tree.map(
+                lambda p, l: sharding.constrain(p, *l),
+                blk_params, blk_logical)
+        xv = sharding.constrain(xv, "batch", "act_seq", "embed")
+        new_caches = {}
+        for i, spec in enumerate(pattern):
+            cache_i = None if blk_cache is None else blk_cache.get(f"l{i}")
+            xv, nc = _layer_apply(cfg, spec, blk_params[f"l{i}"], xv,
+                                  mode=mode, cache=cache_i, pos=pos,
+                                  enc_out=enc_out, getw=getw)
+            if nc is not None:
+                new_caches[f"l{i}"] = nc
+        return xv.astype(in_dtype), (new_caches or None)
+
+    fn = block_fn
+    if remat:
+        fn = jax.checkpoint(block_fn,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_caches = jax.lax.scan(fn, x, (stack_params, caches))
+    return x, new_caches
+
+
+def _has_gamma(tree) -> bool:
+    if isinstance(tree, dict):
+        return "gamma" in tree or any(_has_gamma(v) for v in tree.values())
+    return False
+
+
+def _sliced_block_logical(cfg, mps_on: bool, key: str = "blocks"):
+    """Logical axes of one scan-sliced super-block (leading 'layers'
+    stripped from every leaf)."""
+    log = logical_axes(cfg, mps_on=mps_on)[key]
+    return jax.tree.map(
+        lambda l: tuple(l[1:]) if l and l[0] == "layers" else tuple(l),
+        log, is_leaf=lambda v: isinstance(v, tuple))
+
+
+def _embed_in(cfg, params, batch):
+    if "embeddings" in batch:                  # vlm/audio frontend stub
+        x = batch["embeddings"]
+    else:
+        table = params["embed"]["w"].astype(jnp.bfloat16)
+        x = jnp.take(table, batch["tokens"], axis=0)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), jnp.bfloat16)
+    return x.astype(jnp.bfloat16)
+
+
+def _encode(cfg, params, batch, getw=None):
+    if "enc_embeddings" in batch:
+        xe = batch["enc_embeddings"].astype(jnp.bfloat16)
+    else:
+        xe = _embed_in(cfg, params, batch)
+    xe, _ = _run_stack(cfg, enc_pattern(cfg), params["enc_blocks"], xe,
+                       mode="train", caches=None, pos=None, enc_out=None,
+                       getw=getw, remat=cfg.remat,
+                       blk_logical=_sliced_block_logical(
+                           cfg, _has_gamma(params["enc_blocks"]),
+                           "enc_blocks"))
+    return blocks.rmsnorm(xe, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
+            caches=None, pos=None, ctx: Optional[mps.SearchCtx] = None,
+            logits_mode: str = "full"):
+    """Returns (logits | hidden, new_caches).
+
+    batch keys: tokens (B, S) int32 | embeddings (B, S, D) for stub
+    frontends; + enc_embeddings/enc_tokens for enc-dec.
+    mode: train | prefill | decode.
+    logits_mode: "full" | "last" (final position only -- serving prefill
+    never materializes (B, S, V)) | "hidden" (return the final hidden
+    states; the caller computes logits, e.g. the chunked loss below).
+    """
+    getw = _make_effective_w(ctx, cfg.mps_precisions)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(cfg, params, batch, getw)
+    x = _embed_in(cfg, params, batch)
+    remat = cfg.remat and mode == "train"
+    x, new_caches = _run_stack(
+        cfg, block_pattern(cfg), params["blocks"], x, mode=mode,
+        caches=caches, pos=pos, enc_out=enc_out, getw=getw, remat=remat,
+        blk_logical=_sliced_block_logical(cfg, _has_gamma(params["blocks"])))
+    x = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "hidden":
+        return x, new_caches
+    if logits_mode == "last":
+        x = x[:, -1:, :]
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"].astype(
+        jnp.bfloat16))
+    logits = sharding.constrain(logits, "batch", None, "vocab")
+    if cfg.final_softcap > 0:
+        logits = blocks.softcap(logits, cfg.final_softcap)
+    return logits, new_caches
+
+
+LOSS_SEQ_CHUNKS = 8
+
+
+def loss_fn(cfg: ArchConfig, params, batch,
+            ctx: Optional[mps.SearchCtx] = None,
+            lam: float = 0.0):
+    """Mean next-token cross-entropy (+ lambda * MPS size cost in search
+    mode). Targets use the unpadded vocab range.
+
+    The CE is computed over sequence chunks under jax.checkpoint so the
+    f32 (B, S, V) logits are never materialized -- only (B, S/8, V/TP) is
+    live at once, recomputed in the backward pass (Perf iteration 3:
+    dropped peak temp memory ~40% on qwen3-32b train_4k).
+    """
+    hidden, _ = forward(cfg, params, batch, mode="train", ctx=ctx,
+                        logits_mode="hidden")
+    targets = batch["targets"]
+    head = params["lm_head"]["w"].astype(jnp.bfloat16)
+
+    @jax.checkpoint
+    def chunk_nll(x_c, tgt_c):
+        logits = jnp.einsum("bsd,dv->bsv", x_c, head)
+        logits = sharding.constrain(logits, "batch", None, "vocab")
+        if cfg.final_softcap > 0:
+            logits = blocks.softcap(logits, cfg.final_softcap)
+        logits = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tgt_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - tgt)
+
+    b, s, _ = hidden.shape
+    nc = LOSS_SEQ_CHUNKS if s % LOSS_SEQ_CHUNKS == 0 else 1
+    total = jnp.asarray(0.0, jnp.float32)
+    for i in range(nc):
+        sl = slice(i * (s // nc), (i + 1) * (s // nc))
+        total = total + chunk_nll(hidden[:, sl], targets[:, sl])
+    task = total / float(b * s)
+    if ctx is not None and lam > 0.0:
+        task = task + lam * mps_size_cost(cfg, params, ctx)
+    return task
+
+
+# ---------------------------------------------------------------------------
+# the paper's cost model over the LM parameter tree
+# ---------------------------------------------------------------------------
+
+
+def mps_size_cost(cfg: ArchConfig, params, ctx: mps.SearchCtx) -> jax.Array:
+    """Differentiable expected size (bytes) over all gamma-carrying weights
+    (paper Eq. 9 with C_in fixed -- transformer residual streams keep
+    d_model; pruning benefits show through the 0-bit channel count)."""
+    precisions = cfg.mps_precisions
+    total = jnp.asarray(0.0, jnp.float32)
+
+    def visit(node):
+        nonlocal total
+        if isinstance(node, dict):
+            if "w" in node and "gamma" in node:
+                w, gm = node["w"], node["gamma"]
+                cin = int(np.prod(w.shape[:-1]))
+                if gm.ndim == 3:       # stacked over layers
+                    cin = cin // gm.shape[0]
+                    eb = jax.vmap(
+                        lambda g: mps.expected_bits(g, precisions, ctx)
+                    )(gm)
+                else:
+                    eb = mps.expected_bits(gm, precisions, ctx)
+                total = total + jnp.sum(eb) * cin / 8.0
+            else:
+                for v in node.values():
+                    visit(v)
+
+    visit(params)
+    return total
+
+
+def mps_param_count(cfg: ArchConfig) -> int:
+    """Number of gamma-carrying weight matrices (for reporting)."""
+    tree = abstract_params(cfg, mps_on=True)
+    n = 0
+
+    def visit(node):
+        nonlocal n
+        if isinstance(node, dict):
+            if "gamma" in node:
+                n += 1
+            for k, v in node.items():
+                if isinstance(v, dict):
+                    visit(v)
+
+    visit(tree)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int,
+                enc_len: int = 0, abstract: bool = False):
+    """KV / SSM caches stacked (n_superblocks, ...) per pattern slot."""
+    nsb = n_superblocks(cfg)
+    hkv, hd = cfg.hkv_eff, cfg.head_dim
+
+    def mk(shape, dtype=jnp.bfloat16):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    caches = {}
+    for i, spec in enumerate(block_pattern(cfg)):
+        c = {}
+        if spec.mixer == "mamba":
+            c["mamba"] = {
+                "ssm": mk((nsb, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32),
+                "conv": {
+                    "x": mk((nsb, batch, cfg.ssm_conv - 1, cfg.d_inner)),
+                    "b": mk((nsb, batch, cfg.ssm_conv - 1, cfg.ssm_state)),
+                    "c": mk((nsb, batch, cfg.ssm_conv - 1, cfg.ssm_state)),
+                }}
+        else:
+            c["kv"] = {"k": mk((nsb, batch, seq_len, hkv, hd)),
+                       "v": mk((nsb, batch, seq_len, hkv, hd))}
+        if spec.cross:
+            c["cross_kv"] = {"k": mk((nsb, batch, enc_len, hkv, hd)),
+                             "v": mk((nsb, batch, enc_len, hkv, hd))}
+        caches[f"l{i}"] = c
+    return caches
+
+
+def cache_logical_axes(cfg: ArchConfig):
+    """Logical axes matching init_caches structure."""
+    caches = {}
+    for i, spec in enumerate(block_pattern(cfg)):
+        c = {}
+        if spec.mixer == "mamba":
+            c["mamba"] = {
+                "ssm": ("layers", "batch", "ssm_inner", None, None),
+                "conv": {"x": ("layers", "batch", None, "ssm_inner"),
+                         "b": ("layers", "batch", None, None),
+                         "c": ("layers", "batch", None, None)}}
+        else:
+            c["kv"] = {"k": ("layers", "batch", "kv_seq", None, None),
+                       "v": ("layers", "batch", "kv_seq", None, None)}
+        if spec.cross:
+            c["cross_kv"] = {
+                "k": ("layers", "batch", None, None, None),
+                "v": ("layers", "batch", None, None, None)}
+        caches[f"l{i}"] = c
+    return caches
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Full-sequence forward producing logits + caches."""
+    logits, caches = forward(cfg, params, batch, mode="prefill")
+    return logits, caches
+
+
+def decode_step(cfg: ArchConfig, params, token_batch, caches, pos):
+    """One-token decode. token_batch: {"tokens": (B, 1)} (or embeddings);
+    pos: () int32 current position. Returns (logits (B, 1, V), caches)."""
+    logits, new_caches = forward(cfg, params, token_batch, mode="decode",
+                                 caches=caches, pos=pos)
+    return logits, new_caches

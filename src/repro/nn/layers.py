@@ -1,0 +1,98 @@
+"""Minimal functional NN layers over plain pytrees (no flax available).
+
+Conventions: NHWC activations, conv weights (C_out, C_in // groups, K_y, K_x)
+so the *output-channel axis is 0* everywhere (matching the per-channel MPS
+convention), linear weights (C_out, C_in).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * np.sqrt(2.0 / fan_in)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+           stride: int = 1, padding="SAME", groups: int = 1) -> jax.Array:
+    """x: (N, H, W, C_in); w: (C_out, C_in//groups, K_y, K_x)."""
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        feature_group_count=groups,
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    )
+    if b is not None:
+        out = out + b
+    return out
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None
+           ) -> jax.Array:
+    """x: (..., C_in); w: (C_out, C_in)."""
+    out = jnp.einsum("...i,oi->...o", x, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm with running statistics kept in an explicit state pytree.
+# ---------------------------------------------------------------------------
+
+def bn_init(c: int):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def batchnorm(x: jax.Array, p: dict, train: bool, momentum: float = 0.9,
+              eps: float = 1e-5):
+    """Returns (y, updated_params). Channel axis is the last one."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_p = dict(p)
+        new_p["mean"] = momentum * p["mean"] + (1 - momentum) * mean
+        new_p["var"] = momentum * p["var"] + (1 - momentum) * var
+    else:
+        mean, var = p["mean"], p["var"]
+        new_p = p
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mean) * inv * p["scale"] + p["bias"]
+    return y, new_p
+
+
+def fold_bn_into_conv(w: jax.Array, b: jax.Array | None, bn: dict,
+                      eps: float = 1e-5):
+    """Fold BN (inference form) into the preceding conv/linear (paper 4.2).
+
+    w has C_out on axis 0. Returns (w_folded, b_folded).
+    """
+    inv = 1.0 / np.sqrt(np.asarray(bn["var"]) + eps)
+    g = np.asarray(bn["scale"]) * inv                       # (C,)
+    shape = (w.shape[0],) + (1,) * (w.ndim - 1)
+    w_f = w * jnp.asarray(g).reshape(shape)
+    b0 = b if b is not None else jnp.zeros((w.shape[0],), w.dtype)
+    b_f = (b0 - jnp.asarray(bn["mean"])) * jnp.asarray(g) \
+        + jnp.asarray(bn["bias"])
+    return w_f, b_f
+
+
+def max_pool(x, k=2, stride=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, stride, stride, 1),
+                                 "VALID")
+
+
+def avg_pool(x, k=2, stride=2):
+    s = jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, k, k, 1),
+                              (1, stride, stride, 1), "VALID")
+    return s / float(k * k)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))

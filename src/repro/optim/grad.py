@@ -1,0 +1,77 @@
+"""Gradient utilities: clipping, micro-batch accumulation, int8
+error-feedback compression for cross-pod all-reduce."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def accumulate_grads(loss_fn, params, batches):
+    """Average grads over micro-batches with a lax.scan (constant memory)."""
+    def body(acc, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        acc_g, acc_l = acc
+        new_g = jax.tree.map(jnp.add, acc_g, grads)
+        return (new_g, acc_l + loss), None
+
+    zero = jax.tree.map(jnp.zeros_like, params)
+    (tot_g, tot_l), _ = jax.lax.scan(body, (zero, 0.0), batches)
+    n = jax.tree.leaves(batches)[0].shape[0]
+    return (jax.tree.map(lambda g: g / n, tot_g), tot_l / n)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (cross-pod all-reduce)
+# ---------------------------------------------------------------------------
+
+def compress_int8(g: jax.Array):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, error):
+    """Error-feedback compression: q = Q(g + e); new_e = (g + e) - dq(q).
+
+    The residual ``error`` pytree is carried across steps so quantization
+    noise is unbiased over time (Karimireddy et al. style EF-SGD).
+    """
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        dq = decompress_int8(q, s)
+        return (q, s), corrected - dq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = treedef.unflatten([o[0] for o in out])
+    new_err = treedef.unflatten([o[1] for o in out])
+    return comp, new_err
+
+
+def ef_decompress_tree(comp):
+    return jax.tree.map(lambda qs: decompress_int8(*qs), comp,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and hasattr(x[0], "dtype"))
+
+
+def init_error_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

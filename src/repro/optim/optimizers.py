@@ -1,0 +1,212 @@
+"""Functional optimizers (optax-style init/update pairs) over pytrees.
+
+Includes an int8 block-quantized-state Adam for 100B+ parameter models
+(optimizer memory 2 bytes/param + scales instead of 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params, step) -> (new_params, state)
+
+
+def _tree_map(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0,
+        weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return _tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if weight_decay:
+            grads = _tree_map(lambda g, p: g + weight_decay * p, grads,
+                              params)
+        if momentum == 0.0:
+            new_params = _tree_map(lambda p, g: p - lr_t * g, params, grads)
+            return new_params, state
+        new_state = _tree_map(lambda m, g: momentum * m + g, state, grads)
+        new_params = _tree_map(lambda p, m: p - lr_t * m, params, new_state)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Callable | float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """AdamW when weight_decay > 0 (decoupled decay)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": _tree_map(jnp.zeros_like, params),
+                "v": _tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        t = step + 1
+        lr_t = lr_fn(step)
+        m = _tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"],
+                      grads)
+        v = _tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"],
+                      grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def step_fn(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p
+            return p - lr_t * upd
+
+        new_params = _tree_map(step_fn, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized optimizer state (distributed-scale memory saver)
+# ---------------------------------------------------------------------------
+# Moments are stored int8 *with the parameter's shape* (so they inherit the
+# parameter's sharding unchanged) plus one f32 scale per last-axis row
+# (shape = param.shape[:-1], sharded like the parameter minus its last
+# axis). v is quantized in sqrt-space for relative precision.
+
+
+def _q8_row(x: jax.Array):
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(x), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return q, scale.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.float32)
+
+
+def _dq8_row(q: jax.Array, scale: jax.Array):
+    if q.ndim == 0:
+        return q.astype(jnp.float32) * scale
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def adam_int8(lr: Callable | float, b1: float = 0.9, b2: float = 0.999,
+              eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """Adam with int8 row-quantized first/second moments (2 bytes+/param)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def leaf(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            mq, ms = _q8_row(z)
+            vq, vs = _q8_row(z)
+            return {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+        return _tree_map(leaf, params)
+
+    def update(grads, state, params, step):
+        t = step + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def leaf(p, g, s):
+            g = g.astype(jnp.float32)
+            m = _dq8_row(s["mq"], s["ms"])
+            vsqrt = _dq8_row(s["vq"], s["vs"])
+            v = vsqrt * vsqrt
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+            mq, ms = _q8_row(m)
+            vq, vs = _q8_row(jnp.sqrt(v))
+            return new_p, {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        outs = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_state = treedef.unflatten([o[1] for o in outs])
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def state_logical_axes(opt_name: str, params_logical):
+    """Logical-axis tree matching the optimizer state structure.
+
+    params_logical leaves are tuples of logical axis names (or None).
+    """
+    def like(l):
+        return l
+
+    def minus_last(l):
+        return tuple(l[:-1]) if isinstance(l, tuple) and len(l) > 0 else ()
+
+    is_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+    if opt_name == "adam":
+        return {"m": params_logical, "v": params_logical}
+    if opt_name == "adam_int8":
+        return jax.tree.map(
+            lambda l: {"mq": like(l), "ms": minus_last(l),
+                       "vq": like(l), "vs": minus_last(l)},
+            params_logical, is_leaf=is_leaf)
+    if opt_name == "sgd":
+        return ()
+    raise ValueError(opt_name)
+
+
+def make_optimizer(name: str, lr) -> Optimizer:
+    if name == "adam":
+        return adam(lr)
+    if name == "adam_int8":
+        return adam_int8(lr)
+    if name == "sgd":
+        return sgd(lr, momentum=0.9)
+    raise ValueError(name)
+
+
+def multi_optimizer(partition_fn, optimizers: dict) -> Optimizer:
+    """Route different pytree leaves to different optimizers.
+
+    ``partition_fn(path, leaf) -> key in optimizers``. Used for the search
+    phase: DNN weights -> Adam/SGD, selection parameters -> SGD(0.9) with
+    their own LR (paper Sec. 5.1.1).
+    """
+    def init(params):
+        # each sub-optimizer keeps state for the full tree (simple + correct;
+        # non-owned leaves see zero gradients and are never written back)
+        return {key: opt.init(params) for key, opt in optimizers.items()}
+
+    def update(grads, state, params, step):
+        labels = jax.tree_util.tree_map_with_path(partition_fn, params)
+        new_params = params
+        new_states = {}
+        for key, opt in optimizers.items():
+            g_masked = jax.tree.map(
+                lambda g, l: g if l == key else jnp.zeros_like(g), grads,
+                labels)
+            p_upd, s_new = opt.update(g_masked, state[key], new_params,
+                                      step)
+            new_params = jax.tree.map(
+                lambda p, pn, l: pn if l == key else p, new_params, p_upd,
+                labels)
+            new_states[key] = s_new
+        return new_params, new_states
+
+    return Optimizer(init, update)

@@ -1,0 +1,61 @@
+"""Learning-rate and temperature schedules (all return step -> value)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(v: float):
+    return lambda step: jnp.asarray(v, jnp.float32)
+
+
+def exponential_decay(base: float, decay: float, steps_per_epoch: int = 1):
+    """Paper: LR * 0.99 per epoch (CIFAR-10)."""
+    def fn(step):
+        epoch = step // steps_per_epoch
+        return jnp.asarray(base, jnp.float32) * jnp.power(
+            jnp.asarray(decay, jnp.float32), epoch)
+    return fn
+
+
+def step_decay(base: float, boundaries: tuple, factors: tuple,
+               steps_per_epoch: int = 1):
+    """Paper GSC: halve at epochs 50/100, /2.5 at 150. Boundaries in epochs."""
+    def fn(step):
+        epoch = step // steps_per_epoch
+        v = jnp.asarray(base, jnp.float32)
+        for b, f in zip(boundaries, factors):
+            v = jnp.where(epoch >= b, v * f, v)
+        return v
+    return fn
+
+
+def cosine(base: float, total_steps: int, warmup_steps: int = 0,
+           final_frac: float = 0.0):
+    def fn(step):
+        step_f = jnp.asarray(step, jnp.float32)
+        warm = step_f / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step_f - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * prog))
+        return base * jnp.where(step_f < warmup_steps, warm, cos)
+    return fn
+
+
+def wsd(base: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, final_frac: float = 0.0):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395)."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def fn(step):
+        step_f = jnp.asarray(step, jnp.float32)
+        warm = step_f / warmup
+        decay_prog = jnp.clip((step_f - decay_start)
+                              / jnp.maximum(total_steps - decay_start, 1),
+                              0, 1)
+        dec = 1 - (1 - final_frac) * decay_prog
+        v = jnp.where(step_f < warmup, warm,
+                      jnp.where(step_f < decay_start, 1.0, dec))
+        return base * v
+    return fn

@@ -1,0 +1,97 @@
+"""Batched serving engine + mixed-precision quantized-weight serving.
+
+Two layers:
+  * ServeEngine -- prefill + step-by-step batched decode for any LM arch
+    (greedy sampling), KV caches managed per request batch.
+  * export/apply of *discretized* layers (paper Fig. 3): after the search
+    assigns per-channel precisions, weights are reordered into contiguous
+    per-precision groups, bit-packed, and served through the quant_matmul
+    kernel (TPU) / oracle (CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import discretize
+from repro.kernels.quant_matmul import ops as qops
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: object
+    params: object
+    max_len: int = 512
+
+    def __post_init__(self):
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(self.cfg, p, t, c, pos))
+
+    def generate(self, prompts: np.ndarray, n_tokens: int = 16):
+        """prompts: (B, S0) int32. Greedy continuation of n_tokens."""
+        b, s0 = prompts.shape
+        caches = lm.init_caches(self.cfg, b, self.max_len)
+        # prefill by stepping (simple + exact; a fused prefill exists in
+        # launch/steps.py for the dry-run path)
+        logits = None
+        for i in range(s0):
+            tok = {"tokens": jnp.asarray(prompts[:, i:i + 1])}
+            logits, caches = self._decode(self.params, tok, caches,
+                                          jnp.asarray(i))
+        out = []
+        cur = jnp.argmax(logits[:, -1, : self.cfg.vocab], -1)[:, None]
+        for i in range(n_tokens):
+            out.append(np.asarray(cur))
+            logits, caches = self._decode(
+                self.params, {"tokens": cur}, caches,
+                jnp.asarray(s0 + i))
+            cur = jnp.argmax(logits[:, -1, : self.cfg.vocab], -1)[:, None]
+        return np.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# quantized mixed-precision serving of a discretized layer (paper Fig. 3)
+# ---------------------------------------------------------------------------
+
+def export_mixed_precision_layer(w: np.ndarray, channel_bits: np.ndarray):
+    """w: (C_out, C_in) float weights; channel_bits: (C_out,) in {0,2,4,8}.
+
+    Returns (packed_layers, perm, kept) where packed_layers is
+    [(bits, wq_packed, scales), ...] in ascending-bits order after the
+    Fig. 3 reordering; pruned (0-bit) channels are dropped entirely.
+    """
+    from repro.core import quantizers
+    perm = discretize.reorder_permutations(
+        {"gamma": {"l": channel_bits}})["l"]
+    w_sorted = np.asarray(w)[perm]
+    bits_sorted = np.asarray(channel_bits)[perm]
+    packed = []
+    for b in sorted(set(int(x) for x in bits_sorted if x > 0)):
+        rows = w_sorted[bits_sorted == b]
+        qi, scale = quantizers.integerize_weights(jnp.asarray(rows), b, 0)
+        k = rows.shape[1]
+        per = 8 // b
+        pad = (-k) % per
+        qi_np = np.asarray(qi)
+        if pad:
+            qi_np = np.pad(qi_np, ((0, 0), (0, pad)))
+        packed.append((b, jnp.asarray(qops.pack_weights(qi_np, b)),
+                       jnp.asarray(scale[:, 0])))
+    kept = int(np.sum(bits_sorted > 0))
+    return packed, perm, kept
+
+
+def mixed_precision_matmul(x: jax.Array, packed_layers) -> jax.Array:
+    """Serve y = x @ W^T for a reordered mixed-precision layer: one
+    quant_matmul per precision group, outputs concatenated (Fig. 3)."""
+    xq, sx = qops.quantize_activations(x)
+    outs = []
+    for bits, wq, sw in packed_layers:
+        k_packed = x.shape[-1] * bits // 8 + (
+            0 if (x.shape[-1] * bits) % 8 == 0 else 1)
+        outs.append(qops.quant_matmul(xq, wq, sw, sx, w_bits=bits))
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,60 @@
+"""Tiny property-based testing shim (hypothesis is not installed in this
+container). Provides `@given(...)` running the test over N seeded random
+draws; strategies are plain callables (rng) -> value. No shrinking."""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+N_EXAMPLES = 25
+
+
+def integers(lo, hi):
+    return lambda rng: int(rng.integers(lo, hi + 1))
+
+
+def floats(lo, hi):
+    return lambda rng: float(rng.uniform(lo, hi))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return lambda rng: seq[int(rng.integers(0, len(seq)))]
+
+
+def arrays(shape_strategy, lo=-3.0, hi=3.0, dtype=np.float32):
+    def strat(rng):
+        shape = shape_strategy(rng) if callable(shape_strategy) \
+            else shape_strategy
+        return rng.uniform(lo, hi, size=shape).astype(dtype)
+    return strat
+
+
+def shapes(max_rank=2, max_dim=64, min_dim=1):
+    def strat(rng):
+        rank = int(rng.integers(1, max_rank + 1))
+        return tuple(int(rng.integers(min_dim, max_dim + 1))
+                     for _ in range(rank))
+    return strat
+
+
+def given(**strategies):
+    def deco(fn):
+        # NOTE: no functools.wraps -- pytest must not see the test's real
+        # signature, or it would treat the strategy args as fixtures
+        def wrapper(*args, **kwargs):
+            for i in range(N_EXAMPLES):
+                rng = np.random.default_rng(1000 + i)
+                drawn = {k: s(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"property failed on example {i}: "
+                        f"{ {k: getattr(v, 'shape', v) for k, v in drawn.items()} }"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

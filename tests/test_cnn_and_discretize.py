@@ -1,0 +1,149 @@
+"""Reference CNNs (sizes vs the paper), BN folding, discretization,
+channel reordering (Fig. 3) and NE16 refinement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import discretize, mps, sampling
+from repro.models import cnn
+
+PW = (0, 2, 4, 8)
+PX = (8,)
+
+
+class TestReferenceSizes:
+    """The paper's baseline sizes (Sec. 5.1/5.2): ResNet-9 = 309.44 kB FP32
+    / 77.36 kB w8; DS-CNN = 88.06 kB FP32; ResNet-18 = 45.05 MB FP32."""
+
+    def _wb_bytes(self, g):
+        params = cnn.init_params(g, jax.random.key(0))
+        return sum(int(np.prod(p[k].shape)) * 4
+                   for p in params.values() for k in ("w", "b"))
+
+    def test_resnet9_size_matches_paper(self):
+        kb = self._wb_bytes(cnn.resnet9()) / 1024
+        assert abs(kb - 309.44) / 309.44 < 0.02, kb
+
+    def test_dscnn_size_matches_paper(self):
+        kb = self._wb_bytes(cnn.dscnn()) / 1024
+        assert abs(kb - 88.06) / 88.06 < 0.02, kb
+
+    def test_resnet18_size_matches_paper(self):
+        mb = self._wb_bytes(cnn.resnet18()) / 1024 / 1024
+        assert abs(mb - 45.05) / 45.05 < 0.05, mb
+
+    def test_resnet9_has_9_convs(self):
+        g = cnn.resnet9()
+        convs = [n for n in g.weight_nodes() if n.kind == "conv"]
+        assert len(convs) == 9
+
+
+class TestBNFoldingAndModes:
+    def test_bn_folding_preserves_eval_output(self):
+        g = cnn.resnet9(width=8)
+        params = cnn.init_params(g, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (4,) + g.in_shape)
+        # move BN stats off their init values
+        for _ in range(3):
+            _, params = cnn.apply(g, params, x, mode="float", train=True)
+        y_ref, _ = cnn.apply(g, params, x, mode="float", train=False)
+        folded = cnn.fold_batchnorm(g, params)
+        y_fold, _ = cnn.apply(g, folded, x, mode="float", train=False,
+                              folded=True)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_fold),
+                                   atol=2e-4)
+
+    def test_gamma_sharing_groups(self):
+        g = cnn.resnet9()
+        mp = cnn.init_mps_params(g, PW, PX)
+        # stem & s1b share; blk2 = {s2b, sc2}; blk3 = {s3b, sc3}
+        assert set(mp["gamma"]) == {"stem", "s1a", "blk2", "s2a", "blk3",
+                                    "s3a", "fc"}
+
+    def test_dscnn_pw_dw_sharing(self):
+        g = cnn.dscnn()
+        mp = cnn.init_mps_params(g, PW, PX)
+        # each dw conv shares its producer pw conv's gamma
+        assert "dw0" not in mp["gamma"] and "stem" in mp["gamma"]
+
+    def test_search_and_quant_modes_shapes(self):
+        g = cnn.dscnn(width=16)
+        params = cnn.init_params(g, jax.random.key(0))
+        folded = cnn.fold_batchnorm(g, params)
+        mp = cnn.init_mps_params(g, PW, PX)
+        ctx = mps.SearchCtx(sampling.SOFTMAX, 1.0)
+        x = jax.random.normal(jax.random.key(2), (2,) + g.in_shape)
+        y, _ = cnn.apply(g, folded, x, mode="search", mps_params=mp,
+                         ctx=ctx, folded=True)
+        assert y.shape == (2, 12) and not bool(jnp.any(jnp.isnan(y)))
+        assign = discretize.assign(mp, PW, PX)
+        assign_j = {"gamma": {k: jnp.asarray(v)
+                              for k, v in assign["gamma"].items()},
+                    "delta": assign["delta"],
+                    "alpha": {k: jnp.asarray(v)
+                              for k, v in assign["alpha"].items()}}
+        yq, _ = cnn.apply(g, folded, x, mode="quant", assignment=assign_j,
+                          folded=True)
+        assert yq.shape == (2, 12) and not bool(jnp.any(jnp.isnan(yq)))
+
+
+class TestDiscretize:
+    def _assignment(self):
+        rng = np.random.default_rng(0)
+        return {"gamma": {"a": rng.choice(PW, size=37),
+                          "b": rng.choice(PW, size=64)},
+                "delta": {"a": 8}, "alpha": {"a": 4.0}}
+
+    def test_reorder_sorts_bits_pruned_last(self):
+        a = self._assignment()
+        perms = discretize.reorder_permutations(a)
+        bits = np.asarray(a["gamma"]["a"])[perms["a"]]
+        nz = bits[bits > 0]
+        assert np.all(np.diff(nz) >= 0)          # ascending precision
+        assert np.all(bits[len(nz):] == 0)       # pruned at the end
+
+    def test_sublayer_split_covers_kept_channels(self):
+        a = self._assignment()
+        split = discretize.sublayer_split(a, PW)
+        total = sum(stop - start for _, start, stop in split["a"])
+        assert total == int(np.sum(np.asarray(a["gamma"]["a"]) > 0))
+
+    def test_bits_histogram_sums_to_one(self):
+        a = self._assignment()
+        hist = discretize.bits_histogram(a, PW)
+        for grp, h in hist.items():
+            assert abs(sum(h.values()) - 1.0) < 1e-6
+
+    def test_ne16_refine_monotone_and_faster(self):
+        from repro.core import costs
+        geom = costs.LayerGeom(name="l", kind="conv", cin=16, cout=33,
+                               kx=3, ky=3, out_h=16, out_w=16, gamma="g")
+        bits = np.full(33, 4)
+        bits[-1] = 2                      # 1 straggler channel at 2 bits
+        assign = {"gamma": {"g": bits}, "delta": {}, "alpha": {}}
+        refined, changed = discretize.ne16_refine([geom], assign)
+        new_bits = refined["gamma"]["g"]
+        assert np.all(new_bits >= bits)   # never decreases precision
+        before = costs.ne16_cycles_discrete(geom, bits, 16)
+        after = costs.ne16_cycles_discrete(geom, new_bits, 16)
+        assert after <= before
+
+    def test_channel_reorder_preserves_network_function(self):
+        """Fig. 3: permuting conv channels + consumer's input channels
+        leaves the network function unchanged."""
+        g = cnn.dscnn(width=8)
+        params = cnn.init_params(g, jax.random.key(0))
+        folded = cnn.fold_batchnorm(g, params)
+        x = jax.random.normal(jax.random.key(1), (2,) + g.in_shape)
+        y_ref, _ = cnn.apply(g, folded, x, mode="float", folded=True)
+        # permute stem output channels and fix up consumers (dw0 + pw0)
+        perm = np.random.default_rng(0).permutation(8)
+        p2 = {k: dict(v) for k, v in folded.items()}
+        p2["stem"]["w"] = folded["stem"]["w"][perm]
+        p2["stem"]["b"] = folded["stem"]["b"][perm]
+        p2["dw0"]["w"] = folded["dw0"]["w"][perm]     # dw follows producer
+        p2["dw0"]["b"] = folded["dw0"]["b"][perm]
+        p2["pw0"]["w"] = folded["pw0"]["w"][:, perm]  # consumer cin perm
+        y_perm, _ = cnn.apply(g, p2, x, mode="float", folded=True)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_perm),
+                                   atol=1e-5)

@@ -1,0 +1,149 @@
+"""Tests for the cost regularizers (paper Sec. 4.3)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs, mps, sampling
+
+PW = (0, 2, 4, 8)
+PX = (8,)
+
+
+def _geom(cout=16, cin=8, k=3, hw=10, kind="conv", in_gamma=None):
+    return costs.LayerGeom(name="l", kind=kind, cin=cin, cout=cout,
+                           kx=k, ky=k, out_h=hw, out_w=hw, gamma="g",
+                           in_gamma=in_gamma, in_delta=None)
+
+
+def _onehot_gamma(cout, idx):
+    return jnp.full((cout, len(PW)), -40.0).at[:, idx].set(40.0)
+
+
+CTX = mps.SearchCtx(sampling.SOFTMAX, 1.0)
+
+
+class TestSizeCost:
+    def test_hand_computed_8bit(self):
+        g = _geom()
+        gammas = {"g": _onehot_gamma(16, 3)}   # all 8-bit
+        c = costs.size_cost(g, gammas, {}, PW, PX, CTX)
+        # cin * k * k * cout * 8 bits / 8 = bytes
+        assert np.isclose(float(c), 8 * 9 * 16, rtol=1e-4)
+
+    def test_pruned_channels_cost_zero(self):
+        g = _geom()
+        gammas = {"g": _onehot_gamma(16, 0)}   # all pruned
+        assert float(costs.size_cost(g, gammas, {}, PW, PX, CTX)) < 1e-2
+
+    def test_cin_eff_propagates_producer_pruning(self):
+        producer = jnp.concatenate([_onehot_gamma(4, 0),
+                                    _onehot_gamma(4, 3)])   # half pruned
+        g = _geom(cin=8, in_gamma="p")
+        gammas = {"g": _onehot_gamma(16, 3), "p": producer}
+        c = costs.size_cost(g, gammas, {}, PW, PX, CTX)
+        assert np.isclose(float(c), 4 * 9 * 16, rtol=1e-3)  # cin_eff = 4
+
+    def test_monotone_in_bits(self):
+        vals = [float(costs.size_cost(_geom(), {"g": _onehot_gamma(16, i)},
+                                      {}, PW, PX, CTX)) for i in range(4)]
+        assert vals[0] < vals[1] < vals[2] < vals[3]
+
+
+class TestMPIC:
+    def test_lut_structure(self):
+        # homogeneous: 32/width SIMD lanes; w8a8 = 4 MACs/cycle
+        assert costs.MPIC_LUT[(8, 8)] == 4.0
+        assert costs.MPIC_LUT[(2, 2)] == 16.0
+        # mixed precision faster than the slowest homogeneous operand pair
+        assert costs.MPIC_LUT[(8, 2)] > costs.MPIC_LUT[(8, 8)]
+
+    def test_weak_incentive_below_8bit_with_a8(self):
+        """Fig. 8 insight: with 8-bit acts, MPIC barely rewards 4/2-bit
+        weights (cost ratio << the 4x of the size model) -> pruning is the
+        main lever."""
+        g = _geom()
+        c8 = float(costs.mpic_cost(g, {"g": _onehot_gamma(16, 3)}, {},
+                                   PW, PX, CTX))
+        c2 = float(costs.mpic_cost(g, {"g": _onehot_gamma(16, 1)}, {},
+                                   PW, PX, CTX))
+        assert 1.0 < c8 / c2 < 1.5    # vs 4.0 for the size regularizer
+        c0 = float(costs.mpic_cost(g, {"g": _onehot_gamma(16, 0)}, {},
+                                   PW, PX, CTX))
+        assert c0 < 1e-3              # pruning removes the MACs entirely
+
+
+class TestNE16:
+    def test_32_channel_granularity_step(self):
+        """Fig. 8 insight: 33 channels at one precision cost ~2 PE groups;
+        the 33rd channel is nearly free to promote."""
+        g33 = _geom(cout=33)
+        g32 = _geom(cout=32)
+        c33 = float(costs.ne16_cost(g33, {"g": _onehot_gamma(33, 3)}, {},
+                                    PW, PX, CTX))
+        c32 = float(costs.ne16_cost(g32, {"g": _onehot_gamma(32, 3)}, {},
+                                    PW, PX, CTX))
+        c64 = float(costs.ne16_cost(_geom(cout=64),
+                                    {"g": _onehot_gamma(64, 3)}, {},
+                                    PW, PX, CTX))
+        # 33 channels cost much closer to 64 than to 32 (ceil step)
+        assert (c33 - c32) > 0.5 * (c64 - c33)
+
+    def test_latency_proportional_to_weight_bits(self):
+        g = _geom(cout=32)
+        c8 = float(costs.ne16_cost(g, {"g": _onehot_gamma(32, 3)}, {},
+                                   PW, PX, CTX))
+        c2 = float(costs.ne16_cost(g, {"g": _onehot_gamma(32, 1)}, {},
+                                   PW, PX, CTX))
+        assert 2.0 < c8 / c2 <= 4.5   # bit-serial PE: ~4x from 8b -> 2b
+
+    def test_discrete_matches_soft_at_onehot(self):
+        g = _geom(cout=32)
+        soft = float(costs.ne16_cost(g, {"g": _onehot_gamma(32, 2)}, {},
+                                     PW, PX, CTX))
+        disc = costs.ne16_cycles_discrete(g, np.full(32, 4), cin_eff=8)
+        assert np.isclose(soft, disc, rtol=1e-3)
+
+
+class TestTPU:
+    def test_sub8bit_does_not_cut_compute_but_cuts_memory(self):
+        # big layer -> compute-bound: 8b vs 2b same cost
+        g = _geom(cout=512, cin=512, k=3, hw=64)
+        c8 = float(costs.tpu_cost(g, {"g": _onehot_gamma(512, 3)}, {},
+                                  PW, PX, CTX))
+        c2 = float(costs.tpu_cost(g, {"g": _onehot_gamma(512, 1)}, {},
+                                  PW, PX, CTX))
+        assert np.isclose(c8, c2, rtol=1e-5)
+        # tiny spatial extent -> memory-bound: 2b is ~4x cheaper
+        gm = _geom(cout=512, cin=512, k=3, hw=1)
+        m8 = float(costs.tpu_cost(gm, {"g": _onehot_gamma(512, 3)}, {},
+                                  PW, PX, CTX))
+        m2 = float(costs.tpu_cost(gm, {"g": _onehot_gamma(512, 1)}, {},
+                                  PW, PX, CTX))
+        assert m8 / m2 > 3.0
+
+    def test_pruning_cuts_compute(self):
+        g = _geom(cout=512, cin=512, k=3, hw=64)
+        half = jnp.concatenate([_onehot_gamma(256, 0),
+                                _onehot_gamma(256, 3)])
+        c_full = float(costs.tpu_cost(g, {"g": _onehot_gamma(512, 3)}, {},
+                                      PW, PX, CTX))
+        c_half = float(costs.tpu_cost(g, {"g": half}, {}, PW, PX, CTX))
+        assert np.isclose(c_half, c_full / 2, rtol=0.05)
+
+
+class TestBitops:
+    def test_scales_with_both_precisions(self):
+        g = _geom()
+        deltas = {}
+        c88 = float(costs.bitops_cost(g, {"g": _onehot_gamma(16, 3)},
+                                      deltas, PW, (8,), CTX))
+        c28 = float(costs.bitops_cost(g, {"g": _onehot_gamma(16, 1)},
+                                      deltas, PW, (8,), CTX))
+        assert np.isclose(c88 / c28, 4.0, rtol=1e-3)
+
+
+def test_total_cost_dispatch_all_models():
+    g = [_geom()]
+    gammas = {"g": _onehot_gamma(16, 2)}
+    for m in costs.COST_MODELS:
+        v = float(costs.total_cost(g, gammas, {}, PW, PX, CTX, m))
+        assert v > 0, m

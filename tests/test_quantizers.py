@@ -1,0 +1,90 @@
+"""Unit + property tests for the quantizers (paper Eq. 1 variants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantizers as q
+
+import proptest as pt
+
+
+class TestSymmetricWeights:
+    @pt.given(w=pt.arrays(pt.shapes(max_rank=2, min_dim=2, max_dim=48)),
+              bits=pt.sampled_from([2, 4, 8]))
+    def test_range_and_grid(self, w, bits):
+        w = jnp.asarray(w)
+        if w.ndim == 1:
+            w = w[None, :]
+        out = q.quantize_weights_symmetric(w, bits, 0)
+        # quantized values never exceed the per-channel absmax
+        absmax = jnp.max(jnp.abs(w), axis=1, keepdims=True)
+        assert bool(jnp.all(jnp.abs(out) <= absmax + 1e-6))
+        # values lie on the integer grid: out / scale is integral
+        qmax = 2 ** (bits - 1) - 1
+        scale = jnp.maximum(absmax, 1e-8) / qmax
+        ratio = out / scale
+        assert np.allclose(ratio, jnp.round(ratio), atol=1e-3)
+
+    def test_zero_bits_prunes(self):
+        w = jnp.ones((4, 7))
+        assert bool(jnp.all(q.quantize_weights_symmetric(w, 0) == 0))
+
+    def test_8bit_small_error(self):
+        w = jax.random.normal(jax.random.key(0), (16, 64))
+        out = q.quantize_weights_symmetric(w, 8, 0)
+        scale = jnp.max(jnp.abs(w), axis=1, keepdims=True) / 127.0
+        assert bool(jnp.all(jnp.abs(out - w) <= scale / 2 + 1e-7))
+
+    def test_monotone_error_in_bits(self):
+        w = jax.random.normal(jax.random.key(1), (8, 128))
+        errs = [float(jnp.mean(jnp.abs(
+            q.quantize_weights_symmetric(w, b, 0) - w)))
+            for b in (2, 4, 8)]
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_ste_gradient_identity(self):
+        w = jax.random.normal(jax.random.key(2), (4, 8))
+        g = jax.grad(lambda x: jnp.sum(
+            q.quantize_weights_symmetric(x, 4, 0)))(w)
+        # STE: gradient ~1 inside the clip range; elements exactly on the
+        # boundary (each row's absmax) get the clip's split gradient 0.5
+        assert bool(jnp.all((g == 1.0) | (g == 0.5)))
+        assert float(jnp.mean(g)) > 0.85
+
+    def test_channel_axis(self):
+        w = jax.random.normal(jax.random.key(3), (6, 10))
+        a = q.quantize_weights_symmetric(w, 4, 0)
+        b = q.quantize_weights_symmetric(w.T, 4, 1).T
+        assert np.allclose(a, b, atol=1e-6)
+
+
+class TestPACT:
+    @pt.given(alpha=pt.floats(0.5, 8.0), bits=pt.sampled_from([2, 4, 8]))
+    def test_clip_and_levels(self, alpha, bits):
+        x = jnp.linspace(-2.0, 12.0, 97)
+        out = q.pact_quantize(x, jnp.asarray(alpha), bits)
+        assert float(jnp.min(out)) >= 0.0
+        assert float(jnp.max(out)) <= alpha + 1e-5
+        levels = jnp.unique(jnp.round(out / (alpha / (2 ** bits - 1))))
+        assert levels.shape[0] <= 2 ** bits
+
+    def test_alpha_gradient_flows(self):
+        x = jnp.asarray([0.5, 5.0, 10.0])
+        g = jax.grad(lambda a: jnp.sum(q.pact_quantize(x, a, 8)))(
+            jnp.asarray(2.0))
+        # gradient w.r.t. alpha comes from the clipped region (x > alpha)
+        assert float(g) > 0.5
+
+
+class TestIntegerize:
+    @pt.given(bits=pt.sampled_from([2, 4, 8]))
+    def test_roundtrip_matches_fake_quant(self, bits):
+        w = jax.random.normal(jax.random.key(5), (12, 33))
+        qi, scale = q.integerize_weights(w, bits, 0)
+        assert qi.dtype == jnp.int8
+        recon = qi.astype(jnp.float32) * scale
+        fake = q.quantize_weights_symmetric(w, bits, 0)
+        assert np.allclose(recon, fake, atol=1e-6)
+        assert int(jnp.max(jnp.abs(qi.astype(jnp.int32)))) <= \
+            2 ** (bits - 1) - 1

@@ -1,0 +1,114 @@
+"""Tests for the selection-parameter sampling (Eq. 3) and the MPS effective
+tensors (Eq. 4/5), incl. Eq. 12 rescaling and Eq. 13 init."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mps, quantizers, sampling
+
+import proptest as pt
+
+PW = (0, 2, 4, 8)
+
+
+class TestSampling:
+    @pt.given(tau=pt.floats(0.05, 5.0))
+    def test_softmax_rows_sum_to_one(self, tau):
+        logits = jax.random.normal(jax.random.key(0), (13, 4))
+        p = sampling.sample(logits, sampling.SOFTMAX, tau)
+        assert np.allclose(jnp.sum(p, -1), 1.0, atol=1e-5)
+        assert bool(jnp.all(p >= 0))
+
+    def test_argmax_is_hard_onehot(self):
+        logits = jax.random.normal(jax.random.key(1), (9, 4))
+        p = sampling.sample(logits, sampling.ARGMAX, 1.0)
+        assert np.allclose(jnp.max(p, -1), 1.0, atol=1e-6)
+        assert np.allclose(jnp.sum(p, -1), 1.0, atol=1e-6)
+        assert bool(jnp.all(jnp.argmax(p, -1) == jnp.argmax(logits, -1)))
+
+    def test_argmax_has_soft_gradient(self):
+        logits = jnp.asarray([[0.3, 0.2, 0.1, 0.0]])
+        g = jax.grad(lambda l: jnp.sum(
+            sampling.sample(l, sampling.ARGMAX, 1.0) *
+            jnp.asarray([1.0, 2.0, 3.0, 4.0])))(logits)
+        assert float(jnp.sum(jnp.abs(g))) > 0  # straight-through surrogate
+
+    def test_gumbel_hard_and_stochastic(self):
+        logits = jnp.zeros((6, 4))
+        p1 = sampling.sample(logits, sampling.GUMBEL, 1.0, jax.random.key(0))
+        p2 = sampling.sample(logits, sampling.GUMBEL, 1.0, jax.random.key(7))
+        assert np.allclose(jnp.sum(p1, -1), 1.0, atol=1e-5)
+        assert not np.allclose(p1, p2)
+
+    def test_temperature_schedule_paper_values(self):
+        # CIFAR-10: tau_e = exp(-0.045 e); equal final temp for TIN at 0.638
+        tau = sampling.temperature_schedule(1.0, float(np.exp(-0.045)))
+        assert np.isclose(float(tau(0)), 1.0)
+        assert np.isclose(float(tau(100)), np.exp(-4.5), rtol=1e-4)
+
+    def test_init_eq13_orders_precisions(self):
+        logits = sampling.init_selection_logits(PW, (5,))
+        assert logits.shape == (5, 4)
+        row = np.asarray(logits[0])
+        assert np.all(np.diff(row) > 0)        # 0-bit least likely
+        assert np.isclose(row[-1], 1.0)        # p/max(P) for p = 8
+
+
+class TestEffectiveTensors:
+    def test_onehot_gamma_reduces_to_quantized(self):
+        w = jax.random.normal(jax.random.key(2), (6, 20))
+        for idx, bits in enumerate(PW):
+            gamma = jnp.full((6, 4), -40.0).at[:, idx].set(40.0)
+            ctx = mps.SearchCtx(sampling.SOFTMAX, 1.0)
+            eff = mps.effective_weight(w, gamma, PW, ctx)
+            ref = quantizers.quantize_weights_symmetric(w, bits, 0)
+            assert np.allclose(eff, ref, atol=1e-5), bits
+
+    def test_effective_weight_is_convex_combination(self):
+        w = jax.random.normal(jax.random.key(3), (4, 16))
+        gamma = jax.random.normal(jax.random.key(4), (4, 4))
+        ctx = mps.SearchCtx(sampling.SOFTMAX, 1.0)
+        eff = mps.effective_weight(w, gamma, PW, ctx)
+        qs = quantizers.quantize_weights_multi(w, PW, 0)
+        lo = jnp.min(qs, 0) - 1e-5
+        hi = jnp.max(qs, 0) + 1e-5
+        assert bool(jnp.all(eff >= lo) and jnp.all(eff <= hi))
+
+    def test_kernel_path_matches_jnp_path(self):
+        w = jax.random.normal(jax.random.key(5), (32, 129))
+        gamma = jax.random.normal(jax.random.key(6), (32, 4))
+        eff_j = mps.effective_weight(w, gamma, PW,
+                                     mps.SearchCtx(use_kernel=False))
+        eff_k = mps.effective_weight(w, gamma, PW,
+                                     mps.SearchCtx(use_kernel=True))
+        assert np.allclose(eff_j, eff_k, atol=1e-5)
+
+    def test_rescale_eq12_preserves_magnitude(self):
+        w = jax.random.normal(jax.random.key(7), (8, 32))
+        gamma = sampling.init_selection_logits(PW, (8,))
+        ctx = mps.SearchCtx(sampling.SOFTMAX, 1.0)
+        w_r = mps.rescale_weights_for_search(w, gamma, PW, ctx)
+        eff = mps.effective_weight(w_r, gamma, PW, ctx)
+        # effective magnitude after rescale ~ original magnitude
+        ratio = float(jnp.linalg.norm(eff) / jnp.linalg.norm(w))
+        assert 0.85 < ratio < 1.15
+
+    def test_discretize(self):
+        gamma = jnp.asarray([[9.0, 0, 0, 0], [0, 0, 0, 9.0]])
+        bits = mps.discretize_gamma(gamma, PW)
+        assert list(np.asarray(bits)) == [0, 8]
+
+    @pt.given(tau=pt.floats(0.1, 2.0))
+    def test_expected_bits_bounds(self, tau):
+        gamma = jax.random.normal(jax.random.key(8), (10, 4))
+        eb = mps.expected_bits(gamma, PW, mps.SearchCtx(tau=tau))
+        assert bool(jnp.all(eb >= 0)) and bool(jnp.all(eb <= 8))
+
+    def test_activation_onehot_matches_pact(self):
+        x = jax.random.normal(jax.random.key(9), (5, 7)) * 3
+        alpha = jnp.asarray(2.5)
+        delta = jnp.asarray([-40.0, 40.0, -40.0])
+        ctx = mps.SearchCtx(sampling.SOFTMAX, 1.0)
+        eff = mps.effective_activation(x, delta, alpha, (2, 4, 8), ctx)
+        ref = quantizers.pact_quantize(x, alpha, 4)
+        assert np.allclose(eff, ref, atol=1e-5)

@@ -1,0 +1,99 @@
+"""End-to-end system tests: the paper's 3-phase pipeline on synthetic data,
+quantized mixed-precision serving (Fig. 3 path), and the LM serve engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import discretize, pipeline
+from repro.data import synthetic
+from repro.models import cnn, lm
+from repro.serve import engine
+
+
+@pytest.fixture(scope="module")
+def tiny_pipeline_result():
+    g = cnn.resnet9(width=8)
+    cfg = pipeline.SearchConfig(warmup_steps=120, search_steps=120,
+                                finetune_steps=60, batch=32, lam=10.0)
+    return g, cfg, pipeline.run_pipeline(g, synthetic.CIFAR10_LIKE, cfg)
+
+
+class TestPipeline:
+    def test_accuracy_learns_and_survives_quantization(
+            self, tiny_pipeline_result):
+        _, _, res = tiny_pipeline_result
+        assert res["acc_float"] > 0.55          # learnable synthetic task
+        assert res["acc_final"] > res["acc_float"] - 0.1
+
+    def test_size_reduced_vs_w8(self, tiny_pipeline_result):
+        g, _, res = tiny_pipeline_result
+        params = cnn.init_params(g, jax.random.key(0))
+        w8_bytes = sum(int(np.prod(p["w"].shape)) for p in params.values())
+        assert res["size_bytes"] < w8_bytes     # beats uniform 8-bit
+
+    def test_higher_lambda_smaller_model(self):
+        g = cnn.dscnn(width=8)
+        sizes = []
+        for lam in (1.0, 25.0):
+            cfg = pipeline.SearchConfig(warmup_steps=40, search_steps=80,
+                                        finetune_steps=10, batch=32,
+                                        lam=lam)
+            res = pipeline.run_pipeline(g, synthetic.GSC_LIKE, cfg)
+            sizes.append(res["size_bytes"])
+        assert sizes[1] < sizes[0]
+
+    def test_bits_histogram_valid(self, tiny_pipeline_result):
+        _, cfg, res = tiny_pipeline_result
+        for grp, h in res["bits_histogram"].items():
+            assert abs(sum(h.values()) - 1) < 1e-6
+
+
+class TestQuantizedServing:
+    def test_mixed_precision_layer_matches_fakequant(self):
+        """Fig. 3 export: reorder + pack + per-precision matmuls must match
+        the discretized fake-quant layer up to activation-quant error."""
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(48, 64)).astype(np.float32) * 0.2
+        bits = rng.choice([0, 2, 4, 8], size=48, p=[0.2, 0.2, 0.3, 0.3])
+        x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+        packed, perm, kept = engine.export_mixed_precision_layer(w, bits)
+        y = engine.mixed_precision_matmul(x, packed)
+        assert y.shape == (8, kept)
+        # reference: per-channel fake-quant then matmul, reordered
+        from repro.core import quantizers
+        w_sorted = w[perm]
+        bits_sorted = bits[perm]
+        cols = []
+        for i in range(48):
+            b = int(bits_sorted[i])
+            if b == 0:
+                continue
+            wq = quantizers.quantize_weights_symmetric(
+                jnp.asarray(w_sorted[i:i + 1]), b, 0)
+            cols.append(np.asarray(x @ wq.T))
+        ref = np.concatenate(cols, axis=1)
+        rel = np.linalg.norm(np.asarray(y) - ref) / np.linalg.norm(ref)
+        assert rel < 0.02   # int8 activation quantization error only
+
+    def test_pruned_channels_dropped(self):
+        w = np.ones((16, 32), np.float32)
+        bits = np.zeros(16, np.int64)
+        bits[:4] = 8
+        packed, perm, kept = engine.export_mixed_precision_layer(w, bits)
+        assert kept == 4
+        assert sum(p[1].shape[0] for p in packed) == 4
+
+
+class TestServeEngine:
+    def test_greedy_generation_deterministic(self):
+        cfg = registry.reduced(registry.ARCHS["llama3.2-1b"])
+        params = lm.init_params(cfg, jax.random.key(0))
+        eng = engine.ServeEngine(cfg, params, max_len=32)
+        prompts = np.asarray([[1, 2, 3], [4, 5, 6]], np.int32)
+        out1 = eng.generate(prompts, n_tokens=4)
+        out2 = eng.generate(prompts, n_tokens=4)
+        np.testing.assert_array_equal(out1, out2)
+        assert out1.shape == (2, 4)
+        assert out1.max() < cfg.vocab
