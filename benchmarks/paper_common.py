@@ -1,19 +1,20 @@
 """Shared helpers for the paper-table benchmarks.
 
-All benchmarks run the REAL 3-phase pipeline on synthetic stand-in datasets
-(offline container) with CLI-scalable step budgets; defaults are sized for
-a 1-core CPU. Budgets scale to the paper's 500/200/50-epoch recipes via
---scale.
+All benchmarks run the REAL 3-phase recipe -- now through the composable
+``repro.api`` surface (phase objects + Compressor) -- on synthetic stand-in
+datasets (offline container) with CLI-scalable step budgets; defaults are
+sized for a 1-core CPU. Budgets scale to the paper's 500/200/50-epoch
+recipes via --scale.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import discretize, mps, pipeline, sampling
+from repro import api
+from repro.core import pipeline, sampling
 from repro.data import synthetic
 from repro.models import cnn
 
@@ -38,6 +39,16 @@ def base_config(steps: int = 80, lam: float = 1e-4, **kw
         finetune_steps=max(steps // 2, 10), batch=32, lam=lam, **kw)
 
 
+def run_cfg(g, spec, cfg: pipeline.SearchConfig, init_folded=None,
+            gamma_init=None, hooks=()) -> api.CompressionResult:
+    """Run one SearchConfig through the composable Compressor API."""
+    comp = api.Compressor(g, spec, pw=cfg.pw, px=cfg.px, batch=cfg.batch,
+                          seed=cfg.seed)
+    phases = api.phases_from_config(cfg, gamma_init=gamma_init,
+                                    include_warmup=init_folded is None)
+    return comp.run(phases, hooks=hooks, init_folded=init_folded)
+
+
 def fixed_precision_baseline(g, spec, bits: int, steps: int):
     """Train a w<bits>a8 fixed-precision reference (paper baselines)."""
     pw = (0, 2, 4, 8) if bits in (2, 4, 8) else (0, bits)
@@ -48,15 +59,18 @@ def fixed_precision_baseline(g, spec, bits: int, steps: int):
         onehot = jnp.full((gm.cout, len(pw)), -40.0).at[:, idx].set(40.0)
         gamma_init[gm.gamma] = onehot
     cfg = base_config(steps=steps, lam=0.0, pw=pw)
-    res = pipeline.run_pipeline(g, spec, cfg, gamma_init=gamma_init)
-    return res
+    return run_cfg(g, spec, cfg, gamma_init=gamma_init)
 
 
 def run_sequential_pit_mixprec(g, spec, steps: int, lam_pit: float,
                                lam_mix: float, n_pit_models: int = 2):
     """The paper's baseline flow: PIT channel pruning (float), pick a seed,
     then MixPrec channel-wise MPS on the pruned net. Returns (result,
-    total_seconds) -- total includes training the PIT front (N models)."""
+    total_seconds) -- total includes training the PIT front (N models).
+
+    With phase objects this is literally two phase compositions: a full
+    3-phase run with pw=(0, 32), then a warmup-less run seeded from it.
+    """
     t0 = time.time()
     pit_results = []
     for i, lam in enumerate([lam_pit * f for f in
@@ -65,10 +79,10 @@ def run_sequential_pit_mixprec(g, spec, steps: int, lam_pit: float,
             warmup_steps=steps, search_steps=steps,
             finetune_steps=max(steps // 2, 10), batch=32, lam=lam,
             pw=(0, 32), cost_model="size", seed=i)
-        pit_results.append(pipeline.run_pipeline(g, spec, cfg1))
+        pit_results.append(run_cfg(g, spec, cfg1))
     # pick the PIT seed: best accuracy
-    seed_res = max(pit_results, key=lambda r: r["acc_final"])
-    pruned = seed_res["assignment"]["gamma"]
+    seed_res = max(pit_results, key=lambda r: r.acc_final)
+    pruned = seed_res.plan.channel_bits
 
     # stage 2: MixPrec on the pruned net -- pruned channels pinned to 0-bit,
     # kept channels cannot be pruned further (0-bit logit pinned low)
@@ -85,9 +99,8 @@ def run_sequential_pit_mixprec(g, spec, steps: int, lam_pit: float,
         warmup_steps=0, search_steps=steps,
         finetune_steps=max(steps // 2, 10), batch=32, lam=lam_mix,
         pw=pw2, cost_model="size")
-    res = pipeline.run_pipeline(g, spec, cfg2,
-                                init_net_folded=seed_res["net"],
-                                gamma_init=gamma_init)
+    res = run_cfg(g, spec, cfg2, init_folded=seed_res.net,
+                  gamma_init=gamma_init)
     return res, time.time() - t0
 
 

@@ -8,6 +8,10 @@ benchmarks.run`` or individually: ``python -m benchmarks.paper_tables
   table3 -- deployment: MPIC/NE16 cycles+latency(+energy) for Pareto models
   fig6   -- cost-model cross-evaluation (MPIC-trained model on NE16 & v.v.)
   fig9   -- activation MPS (P_X = {2,4,8}) vs fixed a8, bitops cost
+
+All runs go through the composable ``repro.api`` surface; deployment
+numbers come from the cost-model registry's ``discrete`` face and each
+run's :class:`~repro.api.plan.CompressionPlan`.
 """
 from __future__ import annotations
 
@@ -19,7 +23,8 @@ import time
 import numpy as np
 
 from benchmarks import paper_common as pc
-from repro.core import costs, discretize, pipeline, sampling
+from repro import api
+from repro.core import costs, sampling
 from repro.models import cnn
 
 ART = "artifacts/paper"
@@ -38,14 +43,14 @@ def fig4_sampling(steps: int, bench: str = "cifar10"):
         for lam in (2.0, 8.0, 20.0):
             t0 = time.time()
             cfg = pc.base_config(steps=steps, lam=lam, sampler=method)
-            res = pipeline.run_pipeline(g, spec, cfg)
+            res = pc.run_cfg(g, spec, cfg)
             rows.append({"method": method, "lam": lam,
-                         "acc": res["acc_final"],
-                         "size_kb": res["size_bytes"] / 1024,
-                         "prune_frac": res["prune_fraction"],
+                         "acc": res.acc_final,
+                         "size_kb": res.size_bytes / 1024,
+                         "prune_frac": res.prune_fraction,
                          "wall_s": time.time() - t0})
             print(pc.csv_row(f"fig4/{method}/lam{lam:g}", rows[-1]["wall_s"],
-                             f"acc={res['acc_final']:.3f};"
+                             f"acc={res.acc_final:.3f};"
                              f"kB={rows[-1]['size_kb']:.2f}"))
     _emit(rows, "fig4")
     return rows
@@ -56,33 +61,32 @@ def fig5_sota(steps: int, bench: str = "gsc"):
     rows = []
 
     def record(name, res, wall):
-        rows.append({"method": name, "acc": res["acc_final"],
-                     "size_kb": res["size_bytes"] / 1024,
-                     "prune_frac": res["prune_fraction"], "wall_s": wall})
+        rows.append({"method": name, "acc": res.acc_final,
+                     "size_kb": res.size_bytes / 1024,
+                     "prune_frac": res.prune_fraction, "wall_s": wall})
         print(pc.csv_row(f"fig5/{name}", wall,
-                         f"acc={res['acc_final']:.3f};"
+                         f"acc={res.acc_final:.3f};"
                          f"kB={rows[-1]['size_kb']:.2f}"))
 
     for lam in (8.0, 20.0):
         t0 = time.time()
-        res = pipeline.run_pipeline(
-            g, spec, pc.base_config(steps=steps, lam=lam))
+        res = pc.run_cfg(g, spec, pc.base_config(steps=steps, lam=lam))
         record(f"ours/lam{lam:g}", res, time.time() - t0)
         # MixPrec [8]: channel-wise MPS without the 0-bit option
         t0 = time.time()
-        res = pipeline.run_pipeline(
-            g, spec, pc.base_config(steps=steps, lam=lam, pw=(2, 4, 8)))
+        res = pc.run_cfg(g, spec,
+                         pc.base_config(steps=steps, lam=lam, pw=(2, 4, 8)))
         record(f"mixprec/lam{lam:g}", res, time.time() - t0)
         # EdMIPS-style: layer-wise MPS, no pruning
         t0 = time.time()
-        res = pipeline.run_pipeline(
-            g, spec, pc.base_config(steps=steps, lam=lam, pw=(2, 4, 8),
-                                    layerwise=True))
+        res = pc.run_cfg(g, spec,
+                         pc.base_config(steps=steps, lam=lam, pw=(2, 4, 8),
+                                        layerwise=True))
         record(f"edmips/lam{lam:g}", res, time.time() - t0)
         # PIT-only: pruning in float (0 or 32 bit)
         t0 = time.time()
-        res = pipeline.run_pipeline(
-            g, spec, pc.base_config(steps=steps, lam=lam, pw=(0, 32)))
+        res = pc.run_cfg(g, spec,
+                         pc.base_config(steps=steps, lam=lam, pw=(0, 32)))
         record(f"pit/lam{lam:g}", res, time.time() - t0)
     # sequential PIT -> MixPrec
     res, wall = pc.run_sequential_pit_mixprec(
@@ -95,7 +99,7 @@ def fig5_sota(steps: int, bench: str = "gsc"):
 def table2_speedup(steps: int, bench: str = "gsc"):
     g, spec = pc.small_graph(bench)
     t0 = time.time()
-    pipeline.run_pipeline(g, spec, pc.base_config(steps=steps, lam=8.0))
+    pc.run_cfg(g, spec, pc.base_config(steps=steps, lam=8.0))
     ours_s = time.time() - t0
     _, seq_s = pc.run_sequential_pit_mixprec(
         g, spec, steps, lam_pit=8.0, lam_mix=8.0, n_pit_models=2)
@@ -108,17 +112,19 @@ def table2_speedup(steps: int, bench: str = "gsc"):
     return speedup
 
 
-def _deploy_eval(g, assignment):
-    """Discrete MPIC + NE16 cycles for a concrete assignment."""
+def _deploy_eval(g, plan: api.CompressionPlan):
+    """Discrete MPIC + NE16 cycles for a plan, via the cost registry."""
     geoms = cnn.cost_geoms(g)
     kept = {grp: int(np.sum(np.asarray(b) > 0))
-            for grp, b in assignment["gamma"].items()}
+            for grp, b in plan.channel_bits.items()}
+    mpic_model = api.get_cost_model("mpic")
+    ne16_model = api.get_cost_model("ne16")
     mpic = ne16 = 0.0
     for gm in geoms:
-        bits = np.asarray(assignment["gamma"][gm.gamma])
+        bits = np.asarray(plan.channel_bits[gm.gamma])
         cin_eff = kept.get(gm.in_gamma, gm.cin) if gm.in_gamma else gm.cin
-        mpic += costs.mpic_cycles_discrete(gm, bits, cin_eff)
-        ne16 += costs.ne16_cycles_discrete(gm, bits, cin_eff)
+        mpic += mpic_model.discrete(gm, bits, cin_eff)
+        ne16 += ne16_model.discrete(gm, bits, cin_eff)
     return {"mpic_cycles": mpic,
             "mpic_latency_ms": mpic / costs.MPIC_FREQ_HZ * 1e3,
             "mpic_energy_uj": mpic / costs.MPIC_FREQ_HZ
@@ -140,11 +146,11 @@ def table3_fig6_deployment(steps: int, bench: str = "cifar10"):
             cfg = pc.base_config(steps=steps, lam=lam,
                                  cost_model=cost_model,
                                  ne16_refine=(cost_model == "ne16"))
-            res = pipeline.run_pipeline(g, spec, cfg)
+            res = pc.run_cfg(g, spec, cfg)
             row = {"trained_for": cost_model, "point": label,
-                   "acc": res["acc_final"],
-                   "size_kb": res["size_bytes"] / 1024,
-                   **_deploy_eval(g, res["assignment"]),
+                   "acc": res.acc_final,
+                   "size_kb": res.size_bytes / 1024,
+                   **_deploy_eval(g, res.plan),
                    "wall_s": time.time() - t0}
             rows.append(row)
             print(pc.csv_row(
@@ -155,8 +161,8 @@ def table3_fig6_deployment(steps: int, bench: str = "cifar10"):
         t0 = time.time()
         res = pc.fixed_precision_baseline(g, spec, bits, steps)
         row = {"trained_for": f"fixed-w{bits}a8", "point": "baseline",
-               "acc": res["acc_final"], "size_kb": res["size_bytes"] / 1024,
-               **_deploy_eval(g, res["assignment"]),
+               "acc": res.acc_final, "size_kb": res.size_bytes / 1024,
+               **_deploy_eval(g, res.plan),
                "wall_s": time.time() - t0}
         rows.append(row)
         print(pc.csv_row(f"table3/w{bits}a8", row["wall_s"],
@@ -174,14 +180,14 @@ def fig9_activation_mps(steps: int, bench: str = "cifar10"):
             t0 = time.time()
             cfg = pc.base_config(steps=steps, lam=lam, px=px,
                                  cost_model="bitops")
-            res = pipeline.run_pipeline(g, spec, cfg)
+            res = pc.run_cfg(g, spec, cfg)
             rows.append({"acts": label, "lam": lam,
-                         "acc": res["acc_final"],
-                         "size_kb": res["size_bytes"] / 1024,
+                         "acc": res.acc_final,
+                         "size_kb": res.size_bytes / 1024,
                          "wall_s": time.time() - t0})
             print(pc.csv_row(f"fig9/{label}/lam{lam:g}",
                              rows[-1]["wall_s"],
-                             f"acc={res['acc_final']:.3f}"))
+                             f"acc={res.acc_final:.3f}"))
     _emit(rows, "fig9")
     return rows
 

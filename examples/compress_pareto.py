@@ -1,15 +1,22 @@
-"""Pareto sweep (paper Fig. 4/6): run the joint search at several
-regularization strengths and cost models, print the accuracy-vs-cost front,
-and export the best model's mixed-precision deployment plan (Fig. 3
-reordering + per-precision sub-layers + NE16 refinement).
+"""Pareto sweep (paper Fig. 4/6) on the composable API: run the joint
+search at several regularization strengths, print the accuracy-vs-cost
+front, and export the best model's deployment plan (Fig. 3 reordering +
+per-precision sub-layers + NE16 refinement) straight from its
+CompressionPlan.
+
+Also demonstrates registering a custom cost model by name: pass
+``--cost sram4k`` to optimize a size model that prices every byte of a
+layer beyond a 4 kB per-layer SRAM tile 8x higher.
 
     PYTHONPATH=src python examples/compress_pareto.py --bench gsc
 """
 import argparse
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costs, discretize, pipeline
+from repro import api
+from repro.core import costs, discretize
 from repro.data import synthetic
 from repro.models import cnn
 
@@ -17,42 +24,67 @@ BENCH = {"cifar10": (cnn.resnet9, synthetic.CIFAR10_LIKE),
          "gsc": (cnn.dscnn, synthetic.GSC_LIKE)}
 
 
+class SramTileCost:
+    """Custom hardware model: layer bytes with an 8x penalty on every byte
+    past a 4 kB per-layer SRAM tile (both faces return bytes).
+
+    Registered by name below -- the search picks it up through the cost
+    registry without any change to repro.core.
+    """
+
+    name = "sram4k"
+    tile_bytes = 4 * 1024
+
+    def expected(self, geom, gammas, deltas, pw, px, ctx):
+        b = costs.size_cost(geom, gammas, deltas, pw, px, ctx)
+        return b + 8.0 * jnp.maximum(b - self.tile_bytes, 0.0)
+
+    def discrete(self, geom, channel_bits, cin_eff, act_bits=8):
+        b = costs.size_bytes_discrete(geom, channel_bits, cin_eff)
+        return b + 8.0 * max(b - self.tile_bytes, 0.0)
+
+
+api.register_cost_model(SramTileCost())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="gsc", choices=list(BENCH))
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--cost", default="size")
+    ap.add_argument("--cost", default="size",
+                    choices=list(api.available_cost_models()))
     ap.add_argument("--lams", default="2,8,20")
     args = ap.parse_args()
     builder, spec = BENCH[args.bench]
     g = builder(width=8)
     geoms = cnn.cost_geoms(g)
+    comp = api.Compressor(g, spec, pw=(0, 2, 4, 8), px=(8,), batch=32)
 
     front = []
     for lam in [float(x) for x in args.lams.split(",")]:
-        cfg = pipeline.SearchConfig(
-            warmup_steps=args.steps, search_steps=args.steps,
-            finetune_steps=args.steps // 2, batch=32, lam=lam,
-            cost_model=args.cost, ne16_refine=(args.cost == "ne16"))
-        res = pipeline.run_pipeline(g, spec, cfg)
+        res = comp.run([
+            api.Warmup(steps=args.steps),
+            api.JointSearch(steps=args.steps, lam=lam,
+                            cost_model=args.cost,
+                            ne16_refine=(args.cost == "ne16")),
+            api.Finetune(steps=args.steps // 2)])
         front.append((lam, res))
-        print(f"lambda={lam:6.1f}: acc={res['acc_final']:.3f} "
-              f"size={res['size_bytes']/1024:7.2f} kB "
-              f"pruned={100*res['prune_fraction']:4.1f}%")
+        print(f"lambda={lam:6.1f}: acc={res.acc_final:.3f} "
+              f"size={res.size_bytes/1024:7.2f} kB "
+              f"pruned={100*res.prune_fraction:4.1f}%")
 
     # export the most accurate compressed model's deployment plan
-    best = max(front, key=lambda t: (t[1]["acc_final"],
-                                     -t[1]["size_bytes"]))[1]
-    assign = best["assignment"]
-    split = discretize.sublayer_split(assign, (0, 2, 4, 8))
+    best = max(front, key=lambda t: (t[1].acc_final, -t[1].size_bytes))[1]
+    plan = best.plan
     print("\ndeployment plan (Fig. 3: per-precision sub-layers after "
           "channel reordering):")
-    for grp, segs in split.items():
+    for grp, segs in plan.sublayer_split().items():
         desc = ", ".join(f"{b}-bit x{stop-start}" for b, start, stop in segs)
         print(f"  {grp:6s} -> [{desc}]")
-    refined, promoted = discretize.ne16_refine(geoms, {
-        "gamma": {k: np.asarray(v) for k, v in assign["gamma"].items()},
-        "delta": assign["delta"], "alpha": assign["alpha"]})
+    refined, promoted = discretize.ne16_refine(
+        geoms, {"gamma": {k: np.asarray(v)
+                          for k, v in plan.channel_bits.items()},
+                "delta": plan.act_bits, "alpha": plan.alphas})
     print(f"\nNE16 post-search refinement promoted {promoted} channels "
           f"(32-lane alignment)")
 

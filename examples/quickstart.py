@@ -1,14 +1,25 @@
-"""Quickstart: joint pruning + channel-wise mixed-precision search on the
-paper's CIFAR-10 reference ResNet (synthetic data stand-in), end to end:
-warmup -> search -> discretize -> fine-tune -> report.
+"""Quickstart on the composable Compressor API: joint pruning +
+channel-wise mixed-precision search on the paper's CIFAR-10 reference
+ResNet (synthetic data stand-in), end to end:
+
+  Warmup -> JointSearch -> Finetune  ==>  CompressionPlan
+
+then the plan round-trips through save/load and drives the quantized
+serving export -- the loaded plan packs byte-identical layers.
 
     PYTHONPATH=src python examples/quickstart.py [--steps 150] [--lam 10]
 """
 import argparse
+import os
+import tempfile
 
-from repro.core import pipeline
+import jax
+import numpy as np
+
+from repro import api
 from repro.data import synthetic
 from repro.models import cnn
+from repro.serve import engine
 
 
 def main():
@@ -19,32 +30,64 @@ def main():
     ap.add_argument("--width", type=int, default=8,
                     help="16 = the paper's full ResNet-9")
     ap.add_argument("--cost", default="size",
-                    choices=["size", "bitops", "mpic", "ne16", "tpu"])
+                    choices=list(api.available_cost_models()))
     args = ap.parse_args()
 
     g = cnn.resnet9(width=args.width)
-    cfg = pipeline.SearchConfig(
-        warmup_steps=args.steps, search_steps=args.steps,
-        finetune_steps=args.steps // 2, batch=32, lam=args.lam,
-        cost_model=args.cost)
     print(f"ResNet-9 (width {args.width}) | cost model: {args.cost} | "
           f"lambda {args.lam}")
-    res = pipeline.run_pipeline(g, synthetic.CIFAR10_LIKE, cfg, verbose=True)
+
+    # ---- the paper's 3-phase recipe as an explicit phase composition
+    comp = api.Compressor(g, synthetic.CIFAR10_LIKE, pw=(0, 2, 4, 8),
+                          px=(8,), batch=32, seed=0)
+    res = comp.run(
+        [api.Warmup(steps=args.steps),
+         api.JointSearch(steps=args.steps, lam=args.lam,
+                         cost_model=args.cost),
+         api.Finetune(steps=args.steps // 2)],
+        hooks=[api.MetricsLog(every=100)])
+    plan = res.plan
 
     w8_kb = sum(int(v["w"].size) for v in
-                cnn.init_params(g, __import__("jax").random.key(0)).values()
-                ) / 1024
-    print(f"\nfloat accuracy    : {res['acc_float']:.3f}")
-    print(f"final accuracy    : {res['acc_final']:.3f} (discretized + "
+                cnn.init_params(g, jax.random.key(0)).values()) / 1024
+    print(f"\nfloat accuracy    : {res.acc_float:.3f}")
+    print(f"final accuracy    : {res.acc_final:.3f} (discretized + "
           f"fine-tuned)")
-    print(f"model size        : {res['size_bytes']/1024:.2f} kB "
+    print(f"model size        : {res.size_bytes/1024:.2f} kB "
           f"(w8a8 baseline: {w8_kb:.2f} kB -> "
-          f"{100*(1-res['size_bytes']/1024/w8_kb):.1f}% smaller)")
-    print(f"channels pruned   : {100*res['prune_fraction']:.1f}%")
+          f"{100*(1-res.size_bytes/1024/w8_kb):.1f}% smaller)")
+    print(f"channels pruned   : {100*res.prune_fraction:.1f}%")
     print("\nper-layer bit-width shares (paper Fig. 7):")
-    for grp, h in res["bits_histogram"].items():
+    for grp, h in res.bits_histogram.items():
         shares = " ".join(f"{b}b:{v:.2f}" for b, v in h.items() if v > 0)
         print(f"  {grp:6s} {shares}")
+
+    # ---- the plan is a portable artifact: save -> load -> serve
+    stem = os.path.join(tempfile.mkdtemp(prefix="repro_plan_"), "plan")
+    npz_path = plan.save(stem)
+    loaded = api.CompressionPlan.load(npz_path)
+    print(f"\nplan artifact     : {npz_path} (+ .json)")
+    print(f"round-trip intact : {plan.equals(loaded)}")
+    print(f"provenance        : cost_model={loaded.meta['cost_model']} "
+          f"lam={loaded.meta['lam']} sampler={loaded.meta['sampler']}")
+
+    # one representative layer per gamma group, reshaped to (C_out, C_in*k*k)
+    weights = {}
+    for node in g.weight_nodes():
+        grp = node.group()
+        if grp not in weights:
+            w = np.asarray(res.net[node.name]["w"])
+            weights[grp] = w.reshape(w.shape[0], -1)
+    packed_mem = engine.export_plan_layers(plan, weights)
+    packed_load = engine.export_plan_layers(loaded, weights)
+    identical = all(
+        len(a) == len(b) and all(
+            ba == bb and np.array_equal(wa, wb) and np.array_equal(sa, sb)
+            for (ba, wa, sa), (bb, wb, sb) in zip(a, b))
+        for (a, _, _), (b, _, _) in
+        ((packed_mem[grp], packed_load[grp]) for grp in weights))
+    print(f"serving export    : loaded plan packs identically -> "
+          f"{identical}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Composable compression API (paper Sec. 4.4 + Fig. 3).
+
+Three first-class abstractions:
+
+  * phase objects (:class:`Warmup`, :class:`JointSearch`,
+    :class:`Finetune`) composed by a :class:`Compressor`;
+  * the serializable :class:`CompressionPlan` artifact every downstream
+    consumer (discretize, serve, benchmarks) takes;
+  * a pluggable cost-model registry
+    (:func:`register_cost_model` / :func:`get_cost_model`).
+
+Typical use::
+
+    from repro import api
+    comp = api.Compressor(graph, spec, pw=(0, 2, 4, 8), batch=32)
+    res = comp.run([api.Warmup(steps=300),
+                    api.JointSearch(steps=300, lam=10.0,
+                                    cost_model="ne16"),
+                    api.Finetune(steps=150)])
+    res.plan.save("artifacts/plan")
+"""
+from repro.api.compressor import CompressionResult, Compressor
+from repro.api.cost_models import (CostModel, FunctionCostModel,
+                                   available_cost_models, get_cost_model,
+                                   register_cost_model)
+from repro.api.phases import (CompressionState, Finetune, Hook, JointSearch,
+                              MetricsLog, PeriodicEval, Warmup, accuracy,
+                              cross_entropy, evaluate, phases_from_config)
+from repro.api.plan import CompressionPlan
+
+__all__ = [
+    "CompressionPlan", "CompressionResult", "CompressionState",
+    "Compressor", "CostModel", "Finetune", "FunctionCostModel", "Hook",
+    "JointSearch", "MetricsLog", "PeriodicEval", "Warmup", "accuracy",
+    "available_cost_models", "cross_entropy", "evaluate", "get_cost_model",
+    "phases_from_config", "register_cost_model",
+]

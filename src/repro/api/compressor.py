@@ -1,0 +1,264 @@
+"""The phase-composition orchestrator.
+
+``Compressor`` owns the model-space settings shared by every phase (graph,
+data spec, precision sets, batch size, seed), runs an arbitrary phase list,
+and returns a :class:`CompressionResult` whose centerpiece is the
+serializable :class:`~repro.api.plan.CompressionPlan`.
+
+Checkpoint/resume rides on :class:`repro.checkpoint.CheckpointManager`:
+pass ``checkpoint=manager`` to ``run`` and the orchestrator saves the
+in-flight train state every ``checkpoint_every`` steps plus a carry
+snapshot at every phase boundary; a later ``run`` with the same manager
+resumes from the newest readable checkpoint and -- because every phase
+derives its per-step randomness by folding the step index into a seed-keyed
+base -- replays the identical stream, so an interrupted and a resumed run
+produce the same plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.api import phases as phases_mod
+from repro.api.plan import CompressionPlan
+from repro.models import cnn
+
+_PHASE_STRIDE = 1_000_000    # checkpoint step tag = phase_index*stride+step
+
+
+@dataclasses.dataclass
+class CompressionResult:
+    """Outcome of a full phase composition."""
+
+    plan: Optional[CompressionPlan]
+    net: Any
+    acc_float: Optional[float]
+    acc_final: Optional[float]
+    size_bytes: Optional[float]
+    prune_fraction: Optional[float]
+    bits_histogram: Optional[dict]
+    timings: dict
+    metrics: dict
+    total_s: float
+
+    def as_legacy_dict(self) -> dict:
+        """The result dict shape of the deprecated ``run_pipeline``."""
+        return {
+            "acc_float": self.acc_float,
+            "acc_final": self.acc_final,
+            "size_bytes": self.size_bytes,
+            "prune_fraction": self.prune_fraction,
+            "bits_histogram": self.bits_histogram,
+            "assignment": self.plan.to_assignment()
+            if self.plan is not None else None,
+            "net": self.net,
+            "timings": self.timings,
+            "total_s": self.total_s,
+        }
+
+
+class Compressor:
+    """Drive a list of phase objects over one network + dataset."""
+
+    def __init__(self, graph, spec, *, pw=(0, 2, 4, 8), px=(8,),
+                 batch: int = 64, seed: int = 0):
+        if not pw:
+            raise ValueError("Compressor: pw must be non-empty")
+        if not any(p != 0 for p in pw):
+            raise ValueError(f"Compressor: pw must contain at least one "
+                             f"nonzero precision, got {tuple(pw)}")
+        if any(p < 0 for p in pw):
+            raise ValueError(f"Compressor: pw precisions must be >= 0, "
+                             f"got {tuple(pw)}")
+        if not px or any(p <= 0 for p in px):
+            raise ValueError(f"Compressor: px must be non-empty with "
+                             f"positive precisions, got {tuple(px)}")
+        if batch < 1:
+            raise ValueError(f"Compressor: batch must be >= 1, got {batch}")
+        self.graph = graph
+        self.spec = spec
+        self.pw = tuple(int(p) for p in pw)
+        self.px = tuple(int(p) for p in px)
+        self.batch = int(batch)
+        self.seed = int(seed)
+
+    # ------------------------------------------------------------------ run
+    def run(self, phases, hooks=(), init_folded=None, checkpoint=None,
+            checkpoint_every: int = 50) -> CompressionResult:
+        t_start = time.time()
+        state = phases_mod.CompressionState(
+            graph=self.graph, spec=self.spec, pw=self.pw, px=self.px,
+            batch=self.batch, seed=self.seed)
+        state.folded = init_folded
+        phases = list(phases)
+        hooks = list(hooks)
+
+        start_phase, start_step, resumed_train = 0, 0, None
+        if checkpoint is not None:
+            resumed = self._try_resume(checkpoint, phases, state)
+            if resumed is not None:
+                start_phase, start_step, resumed_train = resumed
+
+        for i, phase in enumerate(phases):
+            if i < start_phase:
+                continue
+            phase_hooks = hooks
+            if checkpoint is not None:
+                phase_hooks = hooks + [_CheckpointSaver(
+                    checkpoint, checkpoint_every, i,
+                    is_last=(i == len(phases) - 1))]
+            for h in phase_hooks:
+                h.on_phase_start(phase, state)
+            t0 = time.time()
+            phase.run(state, hooks=phase_hooks,
+                      start_step=start_step if i == start_phase else 0,
+                      train_state=resumed_train if i == start_phase
+                      else None)
+            key = f"{phase.name}_s"
+            state.timings[key] = state.timings.get(key, 0.0) \
+                + time.time() - t0
+            for h in phase_hooks:
+                h.on_phase_end(phase, state)
+        if checkpoint is not None:
+            checkpoint.wait()
+        return self._result(state, time.time() - t_start)
+
+    def _result(self, state, total_s: float) -> CompressionResult:
+        plan = state.plan
+        size_bytes = prune_frac = hist = None
+        if plan is not None:
+            geoms = cnn.cost_geoms(self.graph)
+            size_bytes = float(plan.size_bytes(geoms))
+            prune_frac = plan.prune_fraction()
+            hist = plan.bits_histogram()
+        net = state.net if state.net is not None else (
+            state.folded if state.folded is not None else state.params)
+        return CompressionResult(
+            plan=plan, net=net,
+            acc_float=state.acc_float, acc_final=state.acc_final,
+            size_bytes=size_bytes, prune_fraction=prune_frac,
+            bits_histogram=hist, timings=dict(state.timings),
+            metrics=dict(state.metrics), total_s=total_s)
+
+    # -------------------------------------------------------------- resume
+    def _try_resume(self, manager, phases, state):
+        """Resume from the newest checkpoint that restores cleanly.
+
+        Unreadable arrays or a template mismatch (e.g. the phase list was
+        edited) fall back to the next-older checkpoint instead of failing
+        the run, matching restore_latest()'s skip-corrupt behavior.
+        """
+        for tag in reversed(manager.all_steps()):
+            try:
+                meta = manager.peek_meta(tag)
+                i = int(meta.get("phase_index", 0))
+                step = int(meta.get("phase_step", 0))
+                if i >= len(phases):
+                    continue
+                carry_tmpl = self._carry_template(meta)
+                restored, _ = manager.restore(tag, {"carry": carry_tmpl})
+                self._apply_carry(state, restored["carry"], meta)
+                if meta.get("boundary"):
+                    return (i, 0, None)
+                train_tmpl = phases[i].init_train_state(state)
+                restored, _ = manager.restore(tag, {"train": train_tmpl})
+                return (i, step, restored["train"])
+            except Exception as e:  # corrupt/mismatched: try an older one
+                print(f"[compressor] cannot resume from checkpoint {tag}: "
+                      f"{e}")
+        return None
+
+    def _folded_template(self):
+        params = cnn.init_params(self.graph, jax.random.key(self.seed))
+        return cnn.fold_batchnorm(self.graph, params)
+
+    def _plan_template(self):
+        mps_params = cnn.init_mps_params(self.graph, self.pw, self.px)
+        tree = {"bits": {}, "perm": {}}
+        for grp, gamma in mps_params["gamma"].items():
+            c = int(gamma.shape[0])
+            tree["bits"][grp] = np.zeros((c,), np.int64)
+            tree["perm"][grp] = np.zeros((c,), np.int64)
+        return tree
+
+    def _carry_template(self, meta) -> dict:
+        carry = {}
+        if meta.get("has_folded"):
+            carry["folded"] = self._folded_template()
+        if meta.get("has_net"):
+            carry["net"] = self._folded_template()
+        if meta.get("has_plan"):
+            carry["plan"] = self._plan_template()
+        return carry
+
+    def _apply_carry(self, state, carry, meta):
+        # unconditional assignment: a failed resume attempt from a newer
+        # checkpoint must not leak state into the fallback attempt
+        state.folded = carry.get("folded")
+        state.net = carry.get("net")
+        state.plan = CompressionPlan.from_tree(
+            carry["plan"], meta["plan_scalars"]) if "plan" in carry else None
+        state.acc_float = float(meta["acc_float"]) \
+            if meta.get("acc_float") is not None else None
+        for key, value in (meta.get("timings") or {}).items():
+            state.timings.setdefault(key, value)
+
+
+class _CheckpointSaver(phases_mod.Hook):
+    """Internal hook: periodic in-phase saves + phase-boundary snapshots."""
+
+    def __init__(self, manager, every: int, phase_index: int,
+                 is_last: bool):
+        self.manager = manager
+        self.every = every
+        self.phase_index = phase_index
+        self.is_last = is_last
+
+    def _carry(self, state) -> dict:
+        carry = {}
+        if state.folded is not None:
+            carry["folded"] = state.folded
+        if state.net is not None:
+            carry["net"] = state.net
+        if state.plan is not None:
+            carry["plan"] = state.plan.to_tree()
+        return carry
+
+    def _meta(self, state, phase_index: int, phase_step: int,
+              boundary: bool) -> dict:
+        return {
+            "phase_index": phase_index,
+            "phase_step": phase_step,
+            "boundary": boundary,
+            "has_folded": state.folded is not None,
+            "has_net": state.net is not None,
+            "has_plan": state.plan is not None,
+            "plan_scalars": state.plan.scalars()
+            if state.plan is not None else None,
+            "acc_float": state.acc_float,
+            "timings": {k: v for k, v in state.timings.items()
+                        if isinstance(v, (int, float))},
+        }
+
+    def on_step(self, phase, state, step, metrics, train_state):
+        if self.every <= 0 or (step + 1) % self.every:
+            return
+        tag = self.phase_index * _PHASE_STRIDE + step + 1
+        self.manager.save(
+            tag, {"carry": self._carry(state), "train": train_state},
+            blocking=False,
+            metadata=self._meta(state, self.phase_index, step + 1,
+                                boundary=False))
+
+    def on_phase_end(self, phase, state):
+        if self.is_last or self.every <= 0:
+            return
+        tag = (self.phase_index + 1) * _PHASE_STRIDE
+        self.manager.save(
+            tag, {"carry": self._carry(state)}, blocking=False,
+            metadata=self._meta(state, self.phase_index + 1, 0,
+                                boundary=True))

@@ -1,0 +1,517 @@
+"""Composable compression phases (paper Sec. 4.4).
+
+The paper's recipe -- warmup -> joint search -> finetune -- is expressed as
+three first-class phase objects. Each phase is a validated config dataclass
+with a ``run(state, hooks=...)`` method that advances a shared
+:class:`CompressionState`; the :class:`~repro.api.compressor.Compressor`
+chains an arbitrary phase list, so the sequential PIT->MixPrec baseline,
+EdMIPS-style layerwise search, fixed-precision references and Pareto sweeps
+are phase compositions rather than keyword flags on a monolithic pipeline.
+
+Hooks observe every phase: ``on_phase_start`` / ``on_step`` /
+``on_phase_end``. Built-ins cover metrics logging, periodic evaluation and
+(via the Compressor) checkpoint/resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import cost_models
+from repro.api.plan import CompressionPlan
+from repro.core import costs, discretize, mps, sampling
+from repro.data import synthetic
+from repro.models import cnn
+from repro.optim import optimizers
+
+
+# ---------------------------------------------------------------------------
+# shared training helpers (canonical home; core.pipeline re-exports them)
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean(jnp.argmax(logits, -1) == labels)
+
+
+def merge_bn_stats(opt_params, fwd_params):
+    """Take optimizer-updated weights but forward-updated BN stats."""
+    out = {}
+    for k, p in opt_params.items():
+        if "bn" in fwd_params.get(k, {}):
+            q = dict(p)
+            bn = dict(q["bn"])
+            bn["mean"] = fwd_params[k]["bn"]["mean"]
+            bn["var"] = fwd_params[k]["bn"]["var"]
+            q["bn"] = bn
+            out[k] = q
+        else:
+            out[k] = p
+    return out
+
+
+def evaluate(g, params, spec, mode="float", assignment=None,
+             pw=(0, 2, 4, 8), px=(8,), n_batches: int = 8,
+             batch: int = 128, folded: bool | None = None) -> float:
+    if folded is None:
+        folded = mode != "float"
+
+    @jax.jit
+    def eval_logits(params, x):
+        logits, _ = cnn.apply(g, params, x, mode=mode, train=False,
+                              assignment=assignment, pw=pw, px=px,
+                              folded=folded)
+        return logits
+
+    accs = []
+    for x, y in synthetic.eval_set(spec, n_batches, batch):
+        accs.append(float(accuracy(eval_logits(params, x), y)))
+    return float(np.mean(accs))
+
+
+def _is_mps_leaf(path, _leaf):
+    return "mps" if any(getattr(p, "key", None) == "mps" for p in path) \
+        else "net"
+
+
+def _check(cond: bool, msg: str):
+    if not cond:
+        raise ValueError(msg)
+
+
+# ---------------------------------------------------------------------------
+# state threaded through the phases
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompressionState:
+    """Everything a phase may consume or produce."""
+
+    graph: Any
+    spec: Any
+    pw: tuple[int, ...]
+    px: tuple[int, ...]
+    batch: int
+    seed: int
+    params: Any = None          # float params with live BN (warmup output)
+    folded: Any = None          # BN-folded net (search input/output)
+    mps_params: Any = None      # selection parameters after the search
+    plan: Optional[CompressionPlan] = None
+    net: Any = None             # final (fine-tuned) network
+    acc_float: Optional[float] = None
+    acc_final: Optional[float] = None
+    timings: dict = dataclasses.field(default_factory=dict)
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    def log_metric(self, phase_name: str, step: int, **values):
+        self.metrics.setdefault(phase_name, []).append(
+            {"step": int(step), **values})
+
+
+# ---------------------------------------------------------------------------
+# hooks
+# ---------------------------------------------------------------------------
+
+class Hook:
+    """Per-phase observer; override any subset of the callbacks."""
+
+    def on_phase_start(self, phase, state: CompressionState):
+        pass
+
+    def on_step(self, phase, state: CompressionState, step: int,
+                metrics: dict, train_state):
+        pass
+
+    def on_phase_end(self, phase, state: CompressionState):
+        pass
+
+
+class MetricsLog(Hook):
+    """Print (and record) step metrics every ``every`` steps."""
+
+    def __init__(self, every: int = 100, printer=print):
+        _check(every >= 1, f"MetricsLog.every must be >= 1, got {every}")
+        self.every = every
+        self.printer = printer
+
+    def on_step(self, phase, state, step, metrics, train_state):
+        if step % self.every:
+            return
+        vals = {k: float(v) for k, v in metrics.items()}
+        state.log_metric(phase.name, step, **vals)
+        shown = " ".join(f"{k}={v:.4g}" for k, v in vals.items())
+        self.printer(f"  {phase.name} {step}: {shown}")
+
+
+class PeriodicEval(Hook):
+    """Run the phase's quick evaluation every ``every`` steps."""
+
+    def __init__(self, every: int = 100, n_batches: int = 2):
+        _check(every >= 1, f"PeriodicEval.every must be >= 1, got {every}")
+        self.every = every
+        self.n_batches = n_batches
+
+    def on_step(self, phase, state, step, metrics, train_state):
+        if (step + 1) % self.every:
+            return
+        quick = getattr(phase, "quick_eval", None)
+        if quick is None:
+            return
+        result = quick(state, train_state, n_batches=self.n_batches)
+        if result:
+            state.log_metric(phase.name, step + 1, **result)
+
+
+def _emit(hooks, phase, state, step, metrics, train_state):
+    for h in hooks:
+        h.on_step(phase, state, step, metrics, train_state)
+
+
+# ---------------------------------------------------------------------------
+# phase 1: float warmup
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class Warmup:
+    """Float training of the full network, then BN folding (phase 1)."""
+
+    steps: int = 300
+    lr: float = 1e-3
+    weight_decay: float = 1e-4
+    name: str = "warmup"
+
+    def __post_init__(self):
+        _check(self.steps >= 0, f"Warmup.steps must be >= 0, "
+                                f"got {self.steps}")
+        _check(self.lr > 0, f"Warmup.lr must be positive, got {self.lr}")
+        _check(self.weight_decay >= 0,
+               f"Warmup.weight_decay must be >= 0, got {self.weight_decay}")
+
+    def _opt(self):
+        return optimizers.adam(self.lr, weight_decay=self.weight_decay)
+
+    def init_train_state(self, state: CompressionState):
+        params = state.params if state.params is not None else \
+            cnn.init_params(state.graph, jax.random.key(state.seed))
+        return {"params": params, "opt": self._opt().init(params)}
+
+    def quick_eval(self, state, train_state, n_batches: int = 2):
+        acc = evaluate(state.graph, train_state["params"], state.spec,
+                       mode="float", n_batches=n_batches)
+        return {"acc_float": acc}
+
+    def run(self, state: CompressionState, hooks=(), start_step: int = 0,
+            train_state=None):
+        g, spec = state.graph, state.spec
+        ts = train_state if train_state is not None \
+            else self.init_train_state(state)
+        opt_w = self._opt()
+
+        @jax.jit
+        def step_fn(params, opt_state, step):
+            x, y = synthetic.class_batch(spec, step, state.batch, state.seed)
+
+            def loss_fn(p):
+                logits, new_p = cnn.apply(g, p, x, mode="float", train=True)
+                return cross_entropy(logits, y), new_p
+
+            (loss, new_p), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_params, opt_state = opt_w.update(grads, opt_state, params,
+                                                 step)
+            # keep the BN running stats updated by the forward pass
+            new_params = merge_bn_stats(new_params, new_p)
+            return new_params, opt_state, loss
+
+        for step in range(start_step, self.steps):
+            params, opt_state, loss = step_fn(ts["params"], ts["opt"], step)
+            ts = {"params": params, "opt": opt_state}
+            _emit(hooks, self, state, step, {"loss": loss}, ts)
+
+        state.params = ts["params"]
+        state.acc_float = evaluate(g, state.params, spec, mode="float")
+        state.folded = cnn.fold_batchnorm(g, state.params)
+        return state
+
+
+# ---------------------------------------------------------------------------
+# phase 2: joint pruning + mixed-precision search
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class JointSearch:
+    """Joint (weights, gamma, delta, alpha) optimization of
+    ``L_task + lambda * R`` on the BN-folded network, then Eq. 7/8
+    discretization into a :class:`CompressionPlan` (phase 2)."""
+
+    steps: int = 300
+    lam: float = 1e-4
+    cost_model: Any = "size"        # registry name or CostModel instance
+    sampler: str = sampling.SOFTMAX
+    lr_weights: float = 1e-3
+    lr_theta: float = 1e-2          # selection params: SGD(0.9)
+    weight_decay: float = 1e-4
+    tau0: float = 1.0
+    tau_end: float = 0.02           # annealed to by the end of the search
+    cost_normalize: bool = True     # R / R(all-max-bit) -> lambda is O(1)
+    layerwise: bool = False         # EdMIPS-style per-layer assignment
+    ne16_refine: bool = False
+    gamma_init: Optional[dict] = None
+    name: str = "search"
+
+    def __post_init__(self):
+        _check(self.steps >= 1,
+               f"JointSearch.steps must be >= 1, got {self.steps}")
+        _check(self.lam >= 0, f"JointSearch.lam must be >= 0, "
+                              f"got {self.lam}")
+        _check(self.lr_weights > 0 and self.lr_theta > 0,
+               f"JointSearch learning rates must be positive, got "
+               f"lr_weights={self.lr_weights}, lr_theta={self.lr_theta}")
+        _check(self.tau0 > 0,
+               f"JointSearch.tau0 must be positive, got {self.tau0}")
+        _check(0 < self.tau_end < self.tau0,
+               f"JointSearch temperature must anneal: need "
+               f"0 < tau_end < tau0, got tau_end={self.tau_end}, "
+               f"tau0={self.tau0}")
+        _check(self.sampler in sampling.SAMPLERS,
+               f"JointSearch.sampler must be one of {sampling.SAMPLERS}, "
+               f"got {self.sampler!r}")
+
+    def _opt(self):
+        return optimizers.multi_optimizer(
+            _is_mps_leaf,
+            {"net": optimizers.adam(self.lr_weights,
+                                    weight_decay=self.weight_decay),
+             "mps": optimizers.sgd(self.lr_theta, momentum=0.9)})
+
+    def _init_mps(self, state: CompressionState):
+        """Initial selection parameters (deterministic; also used to
+        recompute the cost normalizer identically on resume)."""
+        mps_params = cnn.init_mps_params(state.graph, state.pw, state.px,
+                                         layerwise=self.layerwise)
+        if self.gamma_init is not None:
+            mps_params = {**mps_params,
+                          "gamma": {**mps_params["gamma"],
+                                    **self.gamma_init}}
+        return mps_params
+
+    def init_train_state(self, state: CompressionState):
+        if state.folded is None:
+            raise RuntimeError(
+                "JointSearch needs a BN-folded network: run a Warmup phase "
+                "first or pass init_folded= to Compressor.run()")
+        mps_params = self._init_mps(state)
+        # Eq. 12 rescale so the effective tensor keeps the warmup magnitude
+        ctx0 = mps.SearchCtx(self.sampler, self.tau0,
+                             jax.random.key(state.seed + 1))
+        folded = {
+            name: {**p, "w": mps.rescale_weights_for_search(
+                p["w"],
+                mps_params["gamma"][state.graph.node(name).group()],
+                state.pw, ctx0)}
+            for name, p in state.folded.items()}
+        sp = {"net": folded, "mps": mps_params}
+        return {"sp": sp, "opt": self._opt().init(sp)}
+
+    def _cost_scale(self, geoms, cm, state) -> float:
+        """1 / R(all-max-bit): normalizes lambda to O(1).
+
+        Evaluated on the INITIAL selection parameters (rebuilt from the
+        seed, not read from the train state) so a resumed run computes the
+        same normalizer as the run it continues.
+        """
+        if not self.cost_normalize:
+            return 1.0
+        mps_init = self._init_mps(state)
+        hard = {k: jnp.full_like(v, -40.0).at[..., len(state.pw) - 1]
+                .set(40.0) for k, v in mps_init["gamma"].items()}
+        # evaluated on hard one-hot logits: always use the deterministic
+        # softmax sampler (gumbel would demand an rng here)
+        ctx = mps.SearchCtx(sampling.SOFTMAX, 0.01)
+        r_max = float(costs.total_cost(geoms, hard, mps_init["delta"],
+                                       state.pw, state.px, ctx, model=cm))
+        return 1.0 / max(r_max, 1e-9)
+
+    def quick_eval(self, state, train_state, n_batches: int = 2):
+        sp = train_state["sp"]
+        assignment = discretize.assign(sp["mps"], state.pw, state.px)
+        acc = evaluate(state.graph, sp["net"], state.spec, mode="quant",
+                       assignment=assignment, pw=state.pw, px=state.px,
+                       n_batches=n_batches)
+        return {"acc_quant": acc}
+
+    def run(self, state: CompressionState, hooks=(), start_step: int = 0,
+            train_state=None):
+        g, spec = state.graph, state.spec
+        if state.acc_float is None and state.folded is not None:
+            state.acc_float = evaluate(g, state.folded, spec, mode="float",
+                                       folded=True)
+        ts = train_state if train_state is not None \
+            else self.init_train_state(state)
+        geoms = cnn.cost_geoms(g)
+        cm = cost_models.get_cost_model(self.cost_model)
+        cost_scale = self._cost_scale(geoms, cm, state)
+        opt = self._opt()
+
+        @jax.jit
+        def step_fn(sp, opt_state, step, tau, rng):
+            x, y = synthetic.class_batch(spec, 1_000_000 + step, state.batch,
+                                         state.seed)
+            ctx = mps.SearchCtx(self.sampler, tau, rng)
+
+            def loss_fn(sp):
+                logits, _ = cnn.apply(g, sp["net"], x, mode="search",
+                                      mps_params=sp["mps"], ctx=ctx,
+                                      pw=state.pw, px=state.px, folded=True)
+                task = cross_entropy(logits, y)
+                reg = costs.total_cost(geoms, sp["mps"]["gamma"],
+                                       sp["mps"]["delta"], state.pw,
+                                       state.px, ctx,
+                                       model=cm) * cost_scale
+                return task + self.lam * reg, (task, reg)
+
+            (loss, (task, reg)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(sp)
+            sp, opt_state = opt.update(grads, opt_state, sp, step)
+            return sp, opt_state, task, reg
+
+        base_rng = jax.random.key(state.seed + 2)
+        tau_decay = (self.tau_end / self.tau0) ** (
+            1.0 / max(self.steps - 1, 1))
+        for step in range(start_step, self.steps):
+            tau = self.tau0 * (tau_decay ** step)
+            # fold_in (not sequential split) so resume-from-checkpoint
+            # replays the identical stream
+            sub = jax.random.fold_in(base_rng, step)
+            sp, opt_state, task, reg = step_fn(ts["sp"], ts["opt"], step,
+                                               tau, sub)
+            ts = {"sp": sp, "opt": opt_state}
+            _emit(hooks, self, state, step,
+                  {"task": task, "reg": reg, "tau": tau}, ts)
+
+        # ---- discretize (+ optional NE16 refinement) into the plan
+        sp = ts["sp"]
+        mps_final = sp["mps"]
+        if self.layerwise:
+            # broadcast the per-layer decision to every channel of the group
+            geoms_by_g = {gm.gamma: gm for gm in geoms}
+            mps_final = {**mps_final, "gamma": {
+                k: jnp.broadcast_to(v, (geoms_by_g[k].cout, v.shape[-1]))
+                for k, v in mps_final["gamma"].items()}}
+        assignment = discretize.assign(mps_final, state.pw, state.px)
+        if self.ne16_refine:
+            assignment, n_promoted = discretize.ne16_refine(geoms,
+                                                            assignment)
+            state.timings["ne16_promoted"] = n_promoted
+        state.plan = CompressionPlan.from_assignment(
+            assignment, state.pw, state.px,
+            meta={"cost_model": getattr(cm, "name", str(self.cost_model)),
+                  "lam": self.lam, "sampler": self.sampler,
+                  "steps": self.steps, "seed": state.seed,
+                  "layerwise": self.layerwise,
+                  "ne16_refine": self.ne16_refine,
+                  "cost_normalize": self.cost_normalize,
+                  "acc_float": state.acc_float})
+        state.folded = sp["net"]
+        state.mps_params = mps_final
+        return state
+
+
+# ---------------------------------------------------------------------------
+# phase 3: fine-tune the discretized model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class Finetune:
+    """Task-loss-only training of the discretized network (phase 3)."""
+
+    steps: int = 150
+    lr: float = 5e-4
+    weight_decay: float = 1e-4
+    name: str = "finetune"
+
+    def __post_init__(self):
+        _check(self.steps >= 0, f"Finetune.steps must be >= 0, "
+                                f"got {self.steps}")
+        _check(self.lr > 0, f"Finetune.lr must be positive, got {self.lr}")
+        _check(self.weight_decay >= 0,
+               f"Finetune.weight_decay must be >= 0, "
+               f"got {self.weight_decay}")
+
+    def _opt(self):
+        return optimizers.adam(self.lr, weight_decay=self.weight_decay)
+
+    def init_train_state(self, state: CompressionState):
+        if state.folded is None or state.plan is None:
+            raise RuntimeError("Finetune needs a searched network and a "
+                               "CompressionPlan: run JointSearch first")
+        return {"net": state.folded, "opt": self._opt().init(state.folded)}
+
+    def quick_eval(self, state, train_state, n_batches: int = 2):
+        acc = evaluate(state.graph, train_state["net"], state.spec,
+                       mode="quant",
+                       assignment=state.plan.to_assignment(as_jax=True),
+                       pw=state.pw, px=state.px, n_batches=n_batches)
+        return {"acc_quant": acc}
+
+    def run(self, state: CompressionState, hooks=(), start_step: int = 0,
+            train_state=None):
+        g, spec = state.graph, state.spec
+        ts = train_state if train_state is not None \
+            else self.init_train_state(state)
+        assignment = state.plan.to_assignment(as_jax=True)
+        opt_ft = self._opt()
+
+        @jax.jit
+        def step_fn(net, opt_state, step):
+            x, y = synthetic.class_batch(spec, 2_000_000 + step, state.batch,
+                                         state.seed)
+
+            def loss_fn(p):
+                logits, _ = cnn.apply(g, p, x, mode="quant",
+                                      assignment=assignment, folded=True,
+                                      pw=state.pw, px=state.px)
+                return cross_entropy(logits, y)
+
+            loss, grads = jax.value_and_grad(loss_fn)(net)
+            net, opt_state = opt_ft.update(grads, opt_state, net, step)
+            return net, opt_state, loss
+
+        for step in range(start_step, self.steps):
+            net, opt_state, loss = step_fn(ts["net"], ts["opt"], step)
+            ts = {"net": net, "opt": opt_state}
+            _emit(hooks, self, state, step, {"loss": loss}, ts)
+
+        state.net = ts["net"]
+        state.acc_final = evaluate(g, state.net, spec, mode="quant",
+                                   assignment=assignment, pw=state.pw,
+                                   px=state.px)
+        return state
+
+
+# ---------------------------------------------------------------------------
+# recipe helpers
+# ---------------------------------------------------------------------------
+
+def phases_from_config(cfg, gamma_init=None, include_warmup: bool = True):
+    """Build the paper's 3-phase recipe from a legacy ``SearchConfig``."""
+    phases = []
+    if include_warmup:
+        phases.append(Warmup(steps=cfg.warmup_steps, lr=cfg.lr_weights))
+    phases.append(JointSearch(
+        steps=cfg.search_steps, lam=cfg.lam, cost_model=cfg.cost_model,
+        sampler=cfg.sampler, lr_weights=cfg.lr_weights,
+        lr_theta=cfg.lr_theta, tau0=cfg.tau0, tau_end=cfg.tau_end,
+        cost_normalize=cfg.cost_normalize, layerwise=cfg.layerwise,
+        ne16_refine=cfg.ne16_refine, gamma_init=gamma_init))
+    phases.append(Finetune(steps=cfg.finetune_steps,
+                           lr=cfg.lr_weights * 0.5))
+    return phases

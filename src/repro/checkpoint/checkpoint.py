@@ -133,6 +133,21 @@ class CheckpointManager:
             meta = json.loads(str(z["__meta__"]))
         return _unflatten(template, flat), meta
 
+    def peek_meta(self, step: int) -> dict:
+        """Read only the metadata record of one checkpoint (cheap: lets
+        callers decide which template to build before a full restore)."""
+        with np.load(self._fname(step), allow_pickle=False) as z:
+            return json.loads(str(z["__meta__"]))
+
+    def latest_step_and_meta(self):
+        """(step, metadata) of the newest readable checkpoint, or None."""
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.peek_meta(step)
+            except Exception as e:  # corrupt/partial file: skip it
+                print(f"[checkpoint] skipping step {step}: {e}")
+        return None
+
     def restore_latest(self, template: Any):
         """Restore the newest readable checkpoint; skip corrupt files.
         Returns (tree, meta) or (None, None) when nothing is restorable."""

@@ -14,6 +14,11 @@ Models:
 ``C_in,eff`` (Eq. 9) is the *expected un-pruned* channel count of the
 producer layer; pruning an output channel therefore also pays off in every
 consumer layer.
+
+Dispatch goes through the pluggable registry in
+``repro.api.cost_models``: each model above is registered by name with a
+differentiable ``expected`` face (the functions here) and a ``discrete``
+face (the ``*_discrete`` functions below) for deployment reporting.
 """
 from __future__ import annotations
 
@@ -306,18 +311,64 @@ def tpu_cost(geom: LayerGeom, gammas: dict, deltas: dict,
 
 
 # --------------------------------------------------------------------------
-# dispatch
+# discrete (post-search) counterparts for size / bitops / tpu
 # --------------------------------------------------------------------------
-_FNS = {"size": size_cost, "bitops": bitops_cost, "mpic": mpic_cost,
-        "ne16": ne16_cost, "tpu": tpu_cost}
 
+def size_bytes_discrete(geom: LayerGeom, channel_bits, cin_eff: float,
+                        act_bits: int = 8) -> float:
+    """Discrete Eq. 9 bytes of one layer for a concrete assignment."""
+    import numpy as np
+    cin_term = 1.0 if geom.kind == "dwconv" else float(cin_eff)
+    return cin_term * float(geom.kx * geom.ky) \
+        * float(np.sum(np.asarray(channel_bits))) / 8.0
+
+
+def bitops_discrete(geom: LayerGeom, channel_bits, cin_eff: float,
+                    act_bits: int = 8) -> float:
+    """Discrete MACs * px * pw of one layer for a concrete assignment."""
+    import numpy as np
+    spatial = float(geom.out_h * geom.out_w * geom.kx * geom.ky)
+    cin_term = 1.0 if geom.kind == "dwconv" else float(cin_eff)
+    return spatial * cin_term * float(np.sum(np.asarray(channel_bits))) \
+        * float(act_bits)
+
+
+def tpu_seconds_discrete(geom: LayerGeom, channel_bits, cin_eff: float,
+                         act_bits: int = 8) -> float:
+    """Discrete TPU-v5e roofline seconds for a concrete assignment."""
+    import numpy as np
+    channel_bits = np.asarray(channel_bits)
+    k = float(geom.kx * geom.ky)
+    cin_term = 1.0 if geom.kind == "dwconv" else float(cin_eff)
+    spatial = float(geom.out_h * geom.out_w)
+    compute_macs = weight_bits = 0.0
+    for b_w in sorted(set(int(b) for b in channel_bits)):
+        if b_w == 0:
+            continue
+        n = int(np.sum(channel_bits == b_w))
+        lanes = math.ceil(n / TPU_LANE) * TPU_LANE
+        compute_macs += spatial * k * cin_term * lanes
+        weight_bits += k * cin_term * lanes * b_w
+    return max(2.0 * compute_macs / TPU_INT8_OPS,
+               (weight_bits / 8.0) / TPU_HBM_BPS)
+
+
+# --------------------------------------------------------------------------
+# dispatch (via the pluggable registry in repro.api.cost_models)
+# --------------------------------------------------------------------------
 
 def total_cost(geoms: Sequence[LayerGeom], gammas: dict, deltas: dict,
                pw: tuple[int, ...], px: tuple[int, ...],
                ctx: mps.SearchCtx, model: str = "size") -> jax.Array:
-    """Sum of the per-layer regularizer over the whole network."""
-    fn = _FNS[model]
+    """Sum of the per-layer regularizer over the whole network.
+
+    ``model`` is a registry name (or a CostModel instance); custom hardware
+    models registered via ``repro.api.register_cost_model`` resolve here
+    without touching this module.
+    """
+    from repro.api.cost_models import get_cost_model
+    cm = get_cost_model(model)
     total = jnp.asarray(0.0)
     for geom in geoms:
-        total = total + fn(geom, gammas, deltas, pw, px, ctx)
+        total = total + cm.expected(geom, gammas, deltas, pw, px, ctx)
     return total

@@ -1,27 +1,20 @@
-"""Three-phase training recipe (paper Sec. 4.4):
+"""Legacy entry point for the three-phase training recipe (paper Sec. 4.4).
 
-  warmup  -- float weights only, task loss
-  search  -- joint (weights, gamma, delta, alpha) with L_task + lambda*R,
-             after BN folding + Eq. 12 weight rescaling; temperature anneal
-  finetune -- discretized model (Eq. 7/8), task loss only
-
-Runs the paper's CNN track end-to-end on CPU with synthetic data.
+The recipe itself now lives in the composable API:
+``repro.api.Warmup`` / ``JointSearch`` / ``Finetune`` driven by
+``repro.api.Compressor``. This module keeps the original surface --
+:class:`SearchConfig` plus :func:`run_pipeline` -- as a thin, deprecated
+shim over that API so old callers and scripts keep working.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
-from typing import Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import costs, discretize, mps, sampling
-from repro.data import synthetic
-from repro.models import cnn
-from repro.optim import optimizers, schedules
+from repro.api.phases import (accuracy, cross_entropy, evaluate,  # noqa: F401
+                              merge_bn_stats as _merge_bn,
+                              phases_from_config)
+from repro.core import sampling
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,232 +37,73 @@ class SearchConfig:
     layerwise: bool = False         # EdMIPS-style per-layer assignment
     seed: int = 0
 
+    def __post_init__(self):
+        def err(msg: str):
+            raise ValueError(f"SearchConfig: {msg}")
 
-def cross_entropy(logits, labels):
-    logp = jax.nn.log_softmax(logits)
-    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+        if not self.pw:
+            err("pw must be non-empty")
+        if not any(p != 0 for p in self.pw):
+            err(f"pw must contain at least one nonzero precision, "
+                f"got {tuple(self.pw)} (an all-pruned search space cannot "
+                f"represent a network)")
+        if any(p < 0 for p in self.pw):
+            err(f"pw precisions must be >= 0, got {tuple(self.pw)}")
+        if not self.px or any(p <= 0 for p in self.px):
+            err(f"px must be non-empty with positive precisions, "
+                f"got {tuple(self.px)}")
+        if self.warmup_steps < 0:
+            err(f"warmup_steps must be >= 0, got {self.warmup_steps}")
+        if self.search_steps < 1:
+            err(f"search_steps must be >= 1, got {self.search_steps}")
+        if self.finetune_steps < 0:
+            err(f"finetune_steps must be >= 0, got {self.finetune_steps}")
+        if self.batch < 1:
+            err(f"batch must be >= 1, got {self.batch}")
+        if self.lam < 0:
+            err(f"lam must be >= 0, got {self.lam}")
+        if self.lr_weights <= 0 or self.lr_theta <= 0:
+            err(f"learning rates must be positive, got "
+                f"lr_weights={self.lr_weights}, lr_theta={self.lr_theta}")
+        if self.tau0 <= 0:
+            err(f"tau0 must be positive, got {self.tau0}")
+        if not (0 < self.tau_end < self.tau0):
+            err(f"temperature must anneal: need 0 < tau_end < tau0, got "
+                f"tau_end={self.tau_end}, tau0={self.tau0}")
+        if self.sampler not in sampling.SAMPLERS:
+            err(f"sampler must be one of {sampling.SAMPLERS}, "
+                f"got {self.sampler!r}")
 
 
-def accuracy(logits, labels):
-    return jnp.mean(jnp.argmax(logits, -1) == labels)
-
-
-def _is_mps_leaf(path, _leaf):
-    return "mps" if any(getattr(p, "key", None) == "mps" for p in path) \
-        else "net"
-
-
-def run_pipeline(g: cnn.GraphDef, spec: synthetic.ClassificationSpec,
-                 cfg: SearchConfig, verbose: bool = False,
+def run_pipeline(g, spec, cfg: SearchConfig, verbose: bool = False,
                  init_net_folded=None, gamma_init=None):
-    """Full warmup -> search -> finetune run. Returns a result dict.
+    """Deprecated: full warmup -> search -> finetune run (result dict).
+
+    Use ``repro.api.Compressor`` with explicit phase objects instead::
+
+        from repro import api
+        comp = api.Compressor(g, spec, pw=cfg.pw, px=cfg.px,
+                              batch=cfg.batch, seed=cfg.seed)
+        res = comp.run(api.phases_from_config(cfg))
 
     init_net_folded: start the search from these already-BN-folded params
     (skips warmup; used by the sequential PIT->MixPrec baseline).
     gamma_init: override the Eq. 13 gamma initialization per group (used to
     pin channels pruned by a previous stage).
     """
-    t_start = time.time()
-    key = jax.random.key(cfg.seed)
-    params = cnn.init_params(g, key)
-    geoms = cnn.cost_geoms(g)
-    timings = {}
+    warnings.warn(
+        "run_pipeline is deprecated; use repro.api.Compressor with phase "
+        "objects (see repro.api.phases_from_config)",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.compressor import Compressor
 
-    # ---------------- phase 1: warmup (float) ----------------
-    opt_w = optimizers.adam(cfg.lr_weights, weight_decay=1e-4)
-    opt_state = opt_w.init(params)
-
-    @jax.jit
-    def warmup_step(params, opt_state, step):
-        x, y = synthetic.class_batch(spec, step, cfg.batch, cfg.seed)
-
-        def loss_fn(p):
-            logits, new_p = cnn.apply(g, p, x, mode="float", train=True)
-            return cross_entropy(logits, y), new_p
-
-        (loss, new_p), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params)
-        new_params, opt_state = opt_w.update(grads, opt_state, params, step)
-        # keep the BN running stats updated by the forward pass
-        new_params = _merge_bn(new_params, new_p)
-        return new_params, opt_state, loss
-
-    t0 = time.time()
-    if init_net_folded is None:
-        for step in range(cfg.warmup_steps):
-            params, opt_state, loss = warmup_step(params, opt_state, step)
-        acc_float = evaluate(g, params, spec, mode="float")
-        folded = cnn.fold_batchnorm(g, params)
-    else:
-        folded = init_net_folded
-        acc_float = evaluate(g, folded, spec, mode="float", folded=True)
-    timings["warmup_s"] = time.time() - t0
-
-    # ---------------- MPS init + Eq.12 rescale ----------------
-    mps_params = cnn.init_mps_params(g, cfg.pw, cfg.px,
-                                     layerwise=cfg.layerwise)
-    if gamma_init is not None:
-        mps_params = {**mps_params,
-                      "gamma": {**mps_params["gamma"], **gamma_init}}
-    ctx0 = mps.SearchCtx(cfg.sampler, cfg.tau0,
-                         jax.random.key(cfg.seed + 1))
-    folded = {
-        name: {**p, "w": mps.rescale_weights_for_search(
-            p["w"], mps_params["gamma"][g.node(name).group()], cfg.pw,
-            ctx0)}
-        for name, p in folded.items()}
-
-    # ---------------- phase 2: joint search ----------------
-    # normalizer: the cost of the untouched all-8-bit network
-    if cfg.cost_normalize:
-        hard8 = {k: jnp.full_like(v, -40.0).at[..., len(cfg.pw) - 1]
-                 .set(40.0) for k, v in mps_params["gamma"].items()}
-        # normalizer is evaluated on hard one-hot logits: always use the
-        # deterministic softmax sampler (gumbel would demand an rng here)
-        r8 = float(costs.total_cost(geoms, hard8, mps_params["delta"],
-                                    cfg.pw, cfg.px,
-                                    mps.SearchCtx(sampling.SOFTMAX, 0.01),
-                                    cfg.cost_model))
-        cost_scale = 1.0 / max(r8, 1e-9)
-    else:
-        cost_scale = 1.0
-    search_params = {"net": folded, "mps": mps_params}
-    opt = optimizers.multi_optimizer(
-        _is_mps_leaf,
-        {"net": optimizers.adam(cfg.lr_weights, weight_decay=1e-4),
-         "mps": optimizers.sgd(cfg.lr_theta, momentum=0.9)})
-    opt_state = opt.init(search_params)
-
-    @jax.jit
-    def search_step(sp, opt_state, step, tau, rng):
-        x, y = synthetic.class_batch(spec, 1_000_000 + step, cfg.batch,
-                                     cfg.seed)
-        ctx = mps.SearchCtx(cfg.sampler, tau, rng)
-
-        def loss_fn(sp):
-            logits, _ = cnn.apply(g, sp["net"], x, mode="search",
-                                  mps_params=sp["mps"], ctx=ctx,
-                                  pw=cfg.pw, px=cfg.px, folded=True)
-            task = cross_entropy(logits, y)
-            reg = costs.total_cost(geoms, sp["mps"]["gamma"],
-                                   sp["mps"]["delta"], cfg.pw, cfg.px, ctx,
-                                   cfg.cost_model) * cost_scale
-            return task + cfg.lam * reg, (task, reg)
-
-        (loss, (task, reg)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(sp)
-        sp, opt_state = opt.update(grads, opt_state, sp, step)
-        return sp, opt_state, task, reg
-
-    t0 = time.time()
-    rng = jax.random.key(cfg.seed + 2)
-    tau_decay = (cfg.tau_end / cfg.tau0) ** (1.0 /
-                                             max(cfg.search_steps - 1, 1))
-    for step in range(cfg.search_steps):
-        tau = cfg.tau0 * (tau_decay ** step)
-        rng, sub = jax.random.split(rng)
-        search_params, opt_state, task, reg = search_step(
-            search_params, opt_state, step, tau, sub)
-        if verbose and step % 100 == 0:
-            print(f"  search {step}: task={float(task):.3f} "
-                  f"reg={float(reg):.4g}")
-    timings["search_s"] = time.time() - t0
-
-    # ---------------- discretize (+ optional NE16 refinement) -------------
-    if cfg.layerwise:
-        # broadcast the per-layer decision to every channel of the group
-        geoms_by_g = {gm.gamma: gm for gm in geoms}
-        mp = search_params["mps"]
-        mp = {**mp, "gamma": {
-            k: jnp.broadcast_to(v, (geoms_by_g[k].cout, v.shape[-1]))
-            for k, v in mp["gamma"].items()}}
-        search_params = {**search_params, "mps": mp}
-    assignment = discretize.assign(search_params["mps"], cfg.pw, cfg.px)
-    if cfg.ne16_refine:
-        assignment, n_promoted = discretize.ne16_refine(geoms, assignment)
-        timings["ne16_promoted"] = n_promoted
-    assignment = {
-        "gamma": {k: jnp.asarray(v) for k, v in assignment["gamma"].items()},
-        "delta": assignment["delta"],
-        "alpha": {k: jnp.asarray(v) for k, v in assignment["alpha"].items()},
-    }
-
-    # ---------------- phase 3: fine-tune the discrete model ----------------
-    net = search_params["net"]
-    opt_ft = optimizers.adam(cfg.lr_weights * 0.5, weight_decay=1e-4)
-    opt_state = opt_ft.init(net)
-
-    @jax.jit
-    def ft_step(net, opt_state, step):
-        x, y = synthetic.class_batch(spec, 2_000_000 + step, cfg.batch,
-                                     cfg.seed)
-
-        def loss_fn(p):
-            logits, _ = cnn.apply(g, p, x, mode="quant",
-                                  assignment=assignment, folded=True,
-                                  pw=cfg.pw, px=cfg.px)
-            return cross_entropy(logits, y)
-
-        loss, grads = jax.value_and_grad(loss_fn)(net)
-        net, opt_state = opt_ft.update(grads, opt_state, net, step)
-        return net, opt_state, loss
-
-    t0 = time.time()
-    for step in range(cfg.finetune_steps):
-        net, opt_state, loss = ft_step(net, opt_state, step)
-    timings["finetune_s"] = time.time() - t0
-
-    acc_final = evaluate(g, net, spec, mode="quant", assignment=assignment,
-                         pw=cfg.pw, px=cfg.px)
-    np_assign = {"gamma": {k: np.asarray(v)
-                           for k, v in assignment["gamma"].items()},
-                 "delta": assignment["delta"],
-                 "alpha": {k: float(v)
-                           for k, v in assignment["alpha"].items()}}
-    size_bytes = discretize.assignment_size_bytes(geoms, np_assign)
-    return {
-        "acc_float": float(acc_float),
-        "acc_final": float(acc_final),
-        "size_bytes": float(size_bytes),
-        "prune_fraction": discretize.prune_fraction(np_assign),
-        "bits_histogram": discretize.bits_histogram(np_assign, cfg.pw),
-        "assignment": np_assign,
-        "net": net,
-        "timings": timings,
-        "total_s": time.time() - t_start,
-    }
-
-
-def _merge_bn(opt_params, fwd_params):
-    """Take optimizer-updated weights but forward-updated BN stats."""
-    out = {}
-    for k, p in opt_params.items():
-        if "bn" in fwd_params.get(k, {}):
-            q = dict(p)
-            bn = dict(q["bn"])
-            bn["mean"] = fwd_params[k]["bn"]["mean"]
-            bn["var"] = fwd_params[k]["bn"]["var"]
-            q["bn"] = bn
-            out[k] = q
-        else:
-            out[k] = p
-    return out
-
-
-def evaluate(g, params, spec, mode="float", assignment=None,
-             pw=(0, 2, 4, 8), px=(8,), n_batches: int = 8,
-             batch: int = 128, folded: bool | None = None) -> float:
-    if folded is None:
-        folded = mode != "float"
-
-    @jax.jit
-    def eval_logits(params, x):
-        logits, _ = cnn.apply(g, params, x, mode=mode, train=False,
-                              assignment=assignment, pw=pw, px=px,
-                              folded=folded)
-        return logits
-
-    accs = []
-    for x, y in synthetic.eval_set(spec, n_batches, batch):
-        accs.append(float(accuracy(eval_logits(params, x), y)))
-    return float(np.mean(accs))
+    comp = Compressor(g, spec, pw=cfg.pw, px=cfg.px, batch=cfg.batch,
+                      seed=cfg.seed)
+    phases = phases_from_config(cfg, gamma_init=gamma_init,
+                                include_warmup=init_net_folded is None)
+    hooks = []
+    if verbose:
+        from repro.api.phases import MetricsLog
+        hooks.append(MetricsLog(every=100))
+    res = comp.run(phases, hooks=hooks, init_folded=init_net_folded)
+    return res.as_legacy_dict()

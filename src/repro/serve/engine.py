@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import discretize
+from repro.core import discretize, quantizers
 from repro.kernels.quant_matmul import ops as qops
 from repro.models import lm
 
@@ -57,16 +57,20 @@ class ServeEngine:
 # quantized mixed-precision serving of a discretized layer (paper Fig. 3)
 # ---------------------------------------------------------------------------
 
-def export_mixed_precision_layer(w: np.ndarray, channel_bits: np.ndarray):
+def export_mixed_precision_layer(w: np.ndarray, channel_bits: np.ndarray,
+                                 perm: np.ndarray | None = None):
     """w: (C_out, C_in) float weights; channel_bits: (C_out,) in {0,2,4,8}.
 
     Returns (packed_layers, perm, kept) where packed_layers is
     [(bits, wq_packed, scales), ...] in ascending-bits order after the
     Fig. 3 reordering; pruned (0-bit) channels are dropped entirely.
+    ``perm`` overrides the reorder permutation (e.g. the one recorded in a
+    :class:`~repro.api.plan.CompressionPlan`); by default it is recomputed
+    from ``channel_bits``.
     """
-    from repro.core import quantizers
-    perm = discretize.reorder_permutations(
-        {"gamma": {"l": channel_bits}})["l"]
+    if perm is None:
+        perm = discretize.reorder_permutations(
+            {"gamma": {"l": channel_bits}})["l"]
     w_sorted = np.asarray(w)[perm]
     bits_sorted = np.asarray(channel_bits)[perm]
     packed = []
@@ -91,7 +95,25 @@ def mixed_precision_matmul(x: jax.Array, packed_layers) -> jax.Array:
     xq, sx = qops.quantize_activations(x)
     outs = []
     for bits, wq, sw in packed_layers:
-        k_packed = x.shape[-1] * bits // 8 + (
-            0 if (x.shape[-1] * bits) % 8 == 0 else 1)
         outs.append(qops.quant_matmul(xq, wq, sw, sx, w_bits=bits))
     return jnp.concatenate(outs, axis=-1)
+
+
+def export_plan_layers(plan, weights: dict) -> dict:
+    """Export every layer of a :class:`CompressionPlan` for serving.
+
+    ``weights`` maps gamma-group name -> (C_out, C_in) float matrix (conv
+    kernels reshaped to 2-D). Uses the plan's recorded per-group channel
+    bits AND its stored Fig. 3 permutations, so a saved+loaded plan packs
+    byte-identically to the in-memory one. Returns
+    {group: (packed_layers, perm, kept)}.
+    """
+    out = {}
+    for grp, w in weights.items():
+        if grp not in plan.channel_bits:
+            raise KeyError(f"group {grp!r} is not in the plan "
+                           f"(groups: {sorted(plan.channel_bits)})")
+        out[grp] = export_mixed_precision_layer(
+            np.asarray(w), plan.channel_bits[grp],
+            perm=plan.permutations[grp])
+    return out

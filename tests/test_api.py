@@ -1,0 +1,263 @@
+"""Tests for the composable compression API: CompressionPlan round-trip,
+plan-driven serving export, the pluggable cost-model registry, phase/config
+validation, and checkpoint/resume through the Compressor."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import api
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core import costs, pipeline
+from repro.data import synthetic
+from repro.models import cnn
+from repro.serve import engine
+
+
+def _toy_assignment(rng, groups=("a", "b"), c=24):
+    gamma = {g: rng.choice([0, 2, 4, 8], size=c) for g in groups}
+    delta = {f"n{i}": int(b) for i, b in enumerate((8, 4))}
+    alpha = {f"n{i}": float(a) for i, a in enumerate((5.5, 3.25))}
+    return {"gamma": gamma, "delta": delta, "alpha": alpha}
+
+
+class TestCompressionPlan:
+    def test_save_load_round_trip_exact(self, tmp_path):
+        rng = np.random.default_rng(0)
+        plan = api.CompressionPlan.from_assignment(
+            _toy_assignment(rng), pw=(0, 2, 4, 8), px=(4, 8),
+            meta={"cost_model": "size", "lam": 2.5})
+        npz = plan.save(str(tmp_path / "plan"))
+        loaded = api.CompressionPlan.load(npz)
+        assert plan.equals(loaded)
+        assert loaded.pw == (0, 2, 4, 8) and loaded.px == (4, 8)
+        assert loaded.meta == {"cost_model": "size", "lam": 2.5}
+        for grp in plan.channel_bits:
+            np.testing.assert_array_equal(plan.channel_bits[grp],
+                                          loaded.channel_bits[grp])
+            np.testing.assert_array_equal(plan.permutations[grp],
+                                          loaded.permutations[grp])
+        assert loaded.alphas == plan.alphas
+        assert loaded.act_bits == plan.act_bits
+
+    def test_equals_detects_mutation(self, tmp_path):
+        rng = np.random.default_rng(1)
+        plan = api.CompressionPlan.from_assignment(
+            _toy_assignment(rng), pw=(0, 2, 4, 8), px=(8,))
+        loaded = api.CompressionPlan.load(plan.save(str(tmp_path / "p")))
+        loaded.channel_bits["a"][0] = 8 if loaded.channel_bits["a"][0] != 8 \
+            else 4
+        assert not plan.equals(loaded)
+
+    def test_assignment_round_trip_and_metrics(self):
+        rng = np.random.default_rng(2)
+        assignment = _toy_assignment(rng)
+        plan = api.CompressionPlan.from_assignment(assignment,
+                                                   pw=(0, 2, 4, 8), px=(8,))
+        back = plan.to_assignment()
+        for grp, bits in assignment["gamma"].items():
+            np.testing.assert_array_equal(back["gamma"][grp], bits)
+        assert back["delta"] == assignment["delta"]
+        assert back["alpha"] == pytest.approx(assignment["alpha"])
+        all_bits = np.concatenate(list(assignment["gamma"].values()))
+        assert plan.prune_fraction() == pytest.approx(
+            float(np.mean(all_bits == 0)))
+        for grp, segs in plan.sublayer_split().items():
+            sorted_bits = assignment["gamma"][grp][plan.permutations[grp]]
+            for b, start, stop in segs:
+                assert set(sorted_bits[start:stop]) == {b}
+
+    def test_loaded_plan_serves_identically(self, tmp_path):
+        """A plan that went through disk must drive the Fig. 3 serving
+        export to byte-identical packed layers."""
+        rng = np.random.default_rng(3)
+        plan = api.CompressionPlan.from_assignment(
+            _toy_assignment(rng, c=40), pw=(0, 2, 4, 8), px=(8,))
+        loaded = api.CompressionPlan.load(plan.save(str(tmp_path / "p")))
+        weights = {g: rng.normal(size=(40, 32)).astype(np.float32) * 0.2
+                   for g in plan.channel_bits}
+        mem = engine.export_plan_layers(plan, weights)
+        disk = engine.export_plan_layers(loaded, weights)
+        for grp in weights:
+            packed_m, perm_m, kept_m = mem[grp]
+            packed_d, perm_d, kept_d = disk[grp]
+            assert kept_m == kept_d
+            np.testing.assert_array_equal(perm_m, perm_d)
+            assert len(packed_m) == len(packed_d)
+            for (bm, wm, sm), (bd, wd, sd) in zip(packed_m, packed_d):
+                assert bm == bd
+                np.testing.assert_array_equal(np.asarray(wm),
+                                              np.asarray(wd))
+                np.testing.assert_array_equal(np.asarray(sm),
+                                              np.asarray(sd))
+            # and the packed groups actually serve
+            y = engine.mixed_precision_matmul(
+                jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32)),
+                packed_d)
+            assert y.shape == (4, kept_d)
+
+
+class _ConstantishCost:
+    """Toy hardware model: total kept-channel count (differentiable)."""
+
+    name = "test-keptcount"
+
+    def expected(self, geom, gammas, deltas, pw, px, ctx):
+        from repro.core import mps
+        keep = mps.keep_probability(gammas[geom.gamma], pw, ctx)
+        if keep.shape[0] == 1:
+            return keep[0] * float(geom.cout)
+        return jnp.sum(keep)
+
+    def discrete(self, geom, channel_bits, cin_eff, act_bits=8):
+        return float(np.sum(np.asarray(channel_bits) > 0))
+
+
+class TestCostModelRegistry:
+    def test_builtins_registered(self):
+        assert set(costs.COST_MODELS) <= set(api.available_cost_models())
+        for name in costs.COST_MODELS:
+            model = api.get_cost_model(name)
+            assert model.name == name
+
+    def test_unknown_name_is_clear_error(self):
+        with pytest.raises(KeyError, match="unknown cost model"):
+            api.get_cost_model("no-such-hw")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            api.register_cost_model(
+                api.FunctionCostModel("size", lambda *a: 0.0,
+                                      lambda *a: 0.0))
+
+    def test_custom_model_usable_by_name_in_search(self):
+        """A model registered OUTSIDE core/costs.py drives total_cost and a
+        real (tiny) search by registry name."""
+        if "test-keptcount" not in api.available_cost_models():
+            api.register_cost_model(_ConstantishCost())
+        g = cnn.dscnn(width=8)
+        geoms = cnn.cost_geoms(g)
+        mps_params = cnn.init_mps_params(g, (0, 2, 4, 8), (8,))
+        from repro.core import mps, sampling
+        ctx = mps.SearchCtx(sampling.SOFTMAX, 1.0)
+        total = float(costs.total_cost(geoms, mps_params["gamma"],
+                                       mps_params["delta"], (0, 2, 4, 8),
+                                       (8,), ctx, model="test-keptcount"))
+        n_channels = sum(gm.cout for gm in geoms)
+        assert 0 < total <= n_channels
+
+        comp = api.Compressor(g, synthetic.GSC_LIKE, batch=8, seed=0)
+        res = comp.run([api.Warmup(steps=4),
+                        api.JointSearch(steps=4, lam=1.0,
+                                        cost_model="test-keptcount"),
+                        api.Finetune(steps=2)])
+        assert res.plan is not None
+        assert res.plan.meta["cost_model"] == "test-keptcount"
+
+
+class TestValidation:
+    def test_search_config_rejects_bad_values(self):
+        with pytest.raises(ValueError, match="nonzero precision"):
+            pipeline.SearchConfig(pw=(0,))
+        with pytest.raises(ValueError, match="tau_end"):
+            pipeline.SearchConfig(tau_end=2.0)
+        with pytest.raises(ValueError, match="search_steps"):
+            pipeline.SearchConfig(search_steps=0)
+        with pytest.raises(ValueError, match="px"):
+            pipeline.SearchConfig(px=())
+        with pytest.raises(ValueError, match="sampler"):
+            pipeline.SearchConfig(sampler="dice")
+        with pytest.raises(ValueError, match="batch"):
+            pipeline.SearchConfig(batch=0)
+
+    def test_phase_configs_reject_bad_values(self):
+        with pytest.raises(ValueError, match="steps"):
+            api.Warmup(steps=-1)
+        with pytest.raises(ValueError, match="anneal"):
+            api.JointSearch(tau_end=2.0)
+        with pytest.raises(ValueError, match="steps"):
+            api.JointSearch(steps=0)
+        with pytest.raises(ValueError, match="lr"):
+            api.Finetune(lr=0.0)
+
+    def test_compressor_rejects_bad_spaces(self):
+        g = cnn.dscnn(width=8)
+        with pytest.raises(ValueError, match="nonzero"):
+            api.Compressor(g, synthetic.GSC_LIKE, pw=(0,))
+        with pytest.raises(ValueError, match="px"):
+            api.Compressor(g, synthetic.GSC_LIKE, px=())
+
+    def test_search_without_warmup_is_clear_error(self):
+        g = cnn.dscnn(width=8)
+        comp = api.Compressor(g, synthetic.GSC_LIKE, batch=8)
+        with pytest.raises(RuntimeError, match="Warmup"):
+            comp.run([api.JointSearch(steps=2)])
+
+
+class TestCheckpointResume:
+    def test_interrupted_search_resumes_to_identical_plan(self, tmp_path):
+        g = cnn.dscnn(width=8)
+        comp = api.Compressor(g, synthetic.GSC_LIKE, batch=8, seed=0)
+        mk = lambda: [api.Warmup(steps=8),                       # noqa: E731
+                      api.JointSearch(steps=16, lam=5.0),
+                      api.Finetune(steps=4)]
+        reference = comp.run(mk())
+
+        class Boom(api.Hook):
+            def on_step(self, phase, state, step, metrics, train_state):
+                if phase.name == "search" and step == 11:
+                    raise RuntimeError("boom")
+
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        with pytest.raises(RuntimeError, match="boom"):
+            comp.run(mk(), hooks=[Boom()], checkpoint=mgr,
+                     checkpoint_every=4)
+        mgr.wait()
+        assert mgr.all_steps()          # something was checkpointed
+
+        resumed = comp.run(mk(), checkpoint=CheckpointManager(
+            str(tmp_path), keep=3), checkpoint_every=4)
+        assert resumed.plan.equals(reference.plan)
+        assert resumed.acc_final == reference.acc_final
+
+    def test_resume_bit_exact_with_activation_mps(self, tmp_path):
+        """Regression: the cost normalizer must be rebuilt from the INITIAL
+        delta logits on resume. With px > 1 option and a delta-dependent
+        cost model, reading the trained deltas instead would change
+        cost_scale and diverge the resumed run."""
+        g = cnn.dscnn(width=8)
+        comp = api.Compressor(g, synthetic.GSC_LIKE, px=(2, 4, 8), batch=8,
+                              seed=0)
+        mk = lambda: [api.Warmup(steps=4),                       # noqa: E731
+                      api.JointSearch(steps=12, lam=5.0,
+                                      cost_model="bitops"),
+                      api.Finetune(steps=2)]
+        reference = comp.run(mk())
+
+        class Boom(api.Hook):
+            def on_step(self, phase, state, step, metrics, train_state):
+                if phase.name == "search" and step == 9:
+                    raise RuntimeError("boom")
+
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        with pytest.raises(RuntimeError, match="boom"):
+            comp.run(mk(), hooks=[Boom()], checkpoint=mgr,
+                     checkpoint_every=4)
+        mgr.wait()
+        resumed = comp.run(mk(), checkpoint=CheckpointManager(
+            str(tmp_path), keep=3), checkpoint_every=4)
+        assert resumed.plan.equals(reference.plan)
+        assert resumed.acc_final == reference.acc_final
+
+    def test_hooks_record_metrics(self):
+        g = cnn.dscnn(width=8)
+        comp = api.Compressor(g, synthetic.GSC_LIKE, batch=8, seed=0)
+        logged = []
+        res = comp.run(
+            [api.Warmup(steps=4), api.JointSearch(steps=4, lam=1.0),
+             api.Finetune(steps=2)],
+            hooks=[api.MetricsLog(every=2, printer=logged.append),
+                   api.PeriodicEval(every=4, n_batches=1)])
+        assert any(line.startswith("  search") for line in logged)
+        assert "search" in res.metrics
+        assert any("acc_quant" in m for m in res.metrics["search"])

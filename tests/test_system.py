@@ -1,12 +1,14 @@
-"""End-to-end system tests: the paper's 3-phase pipeline on synthetic data,
-quantized mixed-precision serving (Fig. 3 path), and the LM serve engine."""
+"""End-to-end system tests: the paper's 3-phase recipe on the composable
+Compressor API, quantized mixed-precision serving (Fig. 3 path), and the
+LM serve engine. The deprecated ``run_pipeline`` shim gets a smoke test."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.configs import registry
-from repro.core import discretize, pipeline
+from repro.core import pipeline
 from repro.data import synthetic
 from repro.models import cnn, lm
 from repro.serve import engine
@@ -15,39 +17,65 @@ from repro.serve import engine
 @pytest.fixture(scope="module")
 def tiny_pipeline_result():
     g = cnn.resnet9(width=8)
-    cfg = pipeline.SearchConfig(warmup_steps=120, search_steps=120,
-                                finetune_steps=60, batch=32, lam=10.0)
-    return g, cfg, pipeline.run_pipeline(g, synthetic.CIFAR10_LIKE, cfg)
+    comp = api.Compressor(g, synthetic.CIFAR10_LIKE, pw=(0, 2, 4, 8),
+                          px=(8,), batch=32, seed=0)
+    res = comp.run([api.Warmup(steps=120),
+                    api.JointSearch(steps=120, lam=10.0),
+                    api.Finetune(steps=60)])
+    return g, res
 
 
 class TestPipeline:
     def test_accuracy_learns_and_survives_quantization(
             self, tiny_pipeline_result):
-        _, _, res = tiny_pipeline_result
-        assert res["acc_float"] > 0.55          # learnable synthetic task
-        assert res["acc_final"] > res["acc_float"] - 0.1
+        _, res = tiny_pipeline_result
+        assert res.acc_float > 0.55             # learnable synthetic task
+        assert res.acc_final > res.acc_float - 0.1
 
     def test_size_reduced_vs_w8(self, tiny_pipeline_result):
-        g, _, res = tiny_pipeline_result
+        g, res = tiny_pipeline_result
         params = cnn.init_params(g, jax.random.key(0))
         w8_bytes = sum(int(np.prod(p["w"].shape)) for p in params.values())
-        assert res["size_bytes"] < w8_bytes     # beats uniform 8-bit
+        assert res.size_bytes < w8_bytes        # beats uniform 8-bit
 
     def test_higher_lambda_smaller_model(self):
         g = cnn.dscnn(width=8)
+        comp = api.Compressor(g, synthetic.GSC_LIKE, batch=32)
         sizes = []
         for lam in (1.0, 25.0):
-            cfg = pipeline.SearchConfig(warmup_steps=40, search_steps=80,
-                                        finetune_steps=10, batch=32,
-                                        lam=lam)
-            res = pipeline.run_pipeline(g, synthetic.GSC_LIKE, cfg)
-            sizes.append(res["size_bytes"])
+            res = comp.run([api.Warmup(steps=40),
+                            api.JointSearch(steps=80, lam=lam),
+                            api.Finetune(steps=10)])
+            sizes.append(res.size_bytes)
         assert sizes[1] < sizes[0]
 
     def test_bits_histogram_valid(self, tiny_pipeline_result):
-        _, cfg, res = tiny_pipeline_result
-        for grp, h in res["bits_histogram"].items():
+        _, res = tiny_pipeline_result
+        for grp, h in res.bits_histogram.items():
             assert abs(sum(h.values()) - 1) < 1e-6
+
+    def test_plan_is_the_result_artifact(self, tiny_pipeline_result):
+        g, res = tiny_pipeline_result
+        plan = res.plan
+        assert isinstance(plan, api.CompressionPlan)
+        assert plan.meta["cost_model"] == "size"
+        geoms = cnn.cost_geoms(g)
+        assert plan.size_bytes(geoms) == res.size_bytes
+        for grp, bits in plan.channel_bits.items():
+            assert set(np.unique(bits)) <= {0, 2, 4, 8}
+            assert sorted(plan.permutations[grp]) == list(range(len(bits)))
+
+    def test_run_pipeline_shim_matches_legacy_shape(self):
+        g = cnn.dscnn(width=8)
+        cfg = pipeline.SearchConfig(warmup_steps=4, search_steps=4,
+                                    finetune_steps=2, batch=8)
+        with pytest.deprecated_call():
+            res = pipeline.run_pipeline(g, synthetic.GSC_LIKE, cfg)
+        assert set(res) >= {"acc_float", "acc_final", "size_bytes",
+                            "prune_fraction", "bits_histogram",
+                            "assignment", "net", "timings", "total_s"}
+        assert set(res["assignment"]) == {"gamma", "delta", "alpha"}
+        assert {"warmup_s", "search_s", "finetune_s"} <= set(res["timings"])
 
 
 class TestQuantizedServing:
