@@ -1,0 +1,111 @@
+"""Serving throughput benchmark: batched continuous-batching decode,
+float vs. plan-quantized at 2/4/8-bit (and a mixed) precision.
+
+Emits ``BENCH_serve.json`` (the serving-benchmark trajectory format; each
+entry is one serving variant with its measured decode throughput) and
+prints the orchestrator's ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--arch ...] \
+        [--out BENCH_serve.json]
+
+Defaults are sized for a 1-core CPU (the quantized path runs the Pallas
+kernel in interpret mode there; on TPU the same code hits the MXU int8
+kernel, which is where the quantized-vs-float gap becomes a win rather
+than an overhead).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serve import engine
+from repro.serve.sampling import SamplingParams
+
+SCHEMA_VERSION = 1
+
+
+def bench_variant(name, cfg, params, plan, prompts, sp, max_len, max_batch):
+    server = engine.InferenceServer(cfg, params, plan=plan,
+                                    max_len=max_len, max_batch=max_batch)
+    server.generate(prompts, sp)          # compile + warm caches
+    t0 = time.time()
+    out = server.generate(prompts, sp)
+    wall = time.time() - t0
+    tokens = int(sum(len(r) for r in out))
+    row = {
+        "name": name,
+        "tokens": tokens,
+        "wall_s": round(wall, 4),
+        "tok_per_s": round(tokens / wall, 2),
+        "decode_steps": server.stats["decode_steps"],
+        "plan": None,
+    }
+    if plan is not None:
+        row["plan"] = {
+            "groups": len(plan.channel_bits),
+            "prune_fraction": round(plan.prune_fraction(), 4),
+            "meta_bits": plan.meta.get("bits"),
+        }
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b-smoke")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(args.requests, args.prompt_len)
+                           ).astype(np.int32)
+    sp = SamplingParams(max_tokens=args.tokens)   # greedy: deterministic
+
+    variants = [("float", None)]
+    for bits in (8, 4, 2):
+        variants.append((f"quant-w{bits}",
+                         engine.synthetic_plan(cfg, params, bits=bits)))
+    variants.append(("quant-mixed",
+                     engine.synthetic_plan(cfg, params, bits=None, seed=0)))
+
+    results = []
+    for name, plan in variants:
+        row = bench_variant(name, cfg, params, plan, prompts, sp,
+                            args.max_len, args.max_batch)
+        results.append(row)
+        print(f"serve/{name},{row['wall_s'] * 1e6:.0f},"
+              f"tok_per_s={row['tok_per_s']}")
+
+    report = {
+        "benchmark": "serve",
+        "schema_version": SCHEMA_VERSION,
+        "backend": jax.default_backend(),
+        "arch": cfg.name,
+        "config": {"requests": args.requests,
+                   "prompt_len": args.prompt_len,
+                   "tokens": args.tokens,
+                   "max_batch": args.max_batch,
+                   "max_len": args.max_len},
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[serve_bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

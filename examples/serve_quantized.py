@@ -1,63 +1,75 @@
-"""Serve a small model with batched requests through the mixed-precision
-quantized path (paper Fig. 3 / Sec. 4.5): channels reordered into
-per-precision groups, weights bit-packed, each group served by the
-quant_matmul kernel (int8 MXU on TPU; oracle on CPU).
+"""Plan-driven quantized serving (paper Fig. 3 / Sec. 4.5).
+
+The full loop the paper implies but never ships: a CompressionPlan (the
+artifact ``api.Compressor`` produces) is bound into an LM and served --
+continuous batching, fused prefill, per-request sampling -- with every
+planned projection running bit-packed through the quant_matmul kernel
+(int8 MXU on TPU; oracle on CPU).
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
 from repro.models import lm
 from repro.serve import engine
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import Request
 
 
 def main():
-    # 1) batched LM serving (greedy decode with KV caches)
-    cfg = registry.reduced(registry.ARCHS["llama3.2-1b"])
+    cfg = registry.get("llama3.2-1b-smoke")
     params = lm.init_params(cfg, jax.random.key(0))
-    eng = engine.ServeEngine(cfg, params, max_len=64)
-    prompts = np.asarray([[3, 1, 4, 1, 5], [2, 7, 1, 8, 2],
-                          [1, 1, 2, 3, 5], [9, 8, 7, 6, 5]], np.int32)
-    t0 = time.time()
-    out = eng.generate(prompts, n_tokens=12)
-    dt = time.time() - t0
-    print(f"batched decode: {out.shape[0]} requests x {out.shape[1]} "
-          f"tokens in {dt:.2f}s")
-    for i, row in enumerate(out):
-        print(f"  req{i}: {list(row)}")
 
-    # 2) a mixed-precision layer served through the quantized kernel path
+    # 1) a CompressionPlan for the LM's projection groups.  Here: a demo
+    # mixed-precision assignment; a searched plan comes out of
+    # lm.extract_plan after a make_train_step(search=True) run, or -- on
+    # the CNN track -- api.Compressor.run(...).plan.  Plans round-trip
+    # through disk, so search and serving can live on different machines.
+    plan = engine.synthetic_plan(cfg, params, bits=None, seed=0)
+    stem = "/tmp/serve_quantized_plan"
+    plan.save(stem)
+    from repro.api.plan import CompressionPlan
+    loaded = CompressionPlan.load(stem)
+    print(f"plan: {loaded.summary()}")
+
+    # 2) per-layer view: plan.bind packs each group's weight (Fig. 3
+    # reorder + bit-pack); this is exactly what the server binds inside
+    # the forward, so the bytes below are what decode actually reads
+    weights = lm.serve_weight_groups(cfg, params)
+    packed = loaded.bind(weights)
+    packed_bytes = sum(int(w.size) for layers, _, _ in packed.values()
+                       for _, w, _ in layers)
+    float_bytes = sum(w.size * 4 for w in weights.values())
+    print(f"packed projection bytes: {packed_bytes} "
+          f"(fp32 baseline {float_bytes}; "
+          f"{float_bytes / packed_bytes:.1f}x smaller)")
+
+    # 3) serve through the quantized path: requests arriving over time,
+    # admitted into free decode slots (continuous batching), sampled at
+    # temperature 0.7
+    server = engine.InferenceServer(cfg, params, plan=loaded,
+                                    max_len=64, max_batch=2)
     rng = np.random.default_rng(0)
-    w = rng.normal(size=(128, 256)).astype(np.float32) * 0.1
-    channel_bits = rng.choice([0, 2, 4, 8], size=128,
-                              p=[0.15, 0.2, 0.3, 0.35])
-    packed, perm, kept = engine.export_mixed_precision_layer(w, channel_bits)
-    x = jnp.asarray(rng.normal(size=(16, 256)).astype(np.float32))
-    y = engine.mixed_precision_matmul(x, packed)
-    # deployment-consistency reference: the discretized fake-quant layer
-    # (what the fine-tuned model actually computes)
-    from repro.core import quantizers
-    w_perm = w[perm]
-    bits_perm = np.asarray(channel_bits)[perm]
-    rows = [np.asarray(quantizers.quantize_weights_symmetric(
-        jnp.asarray(w_perm[i:i + 1]), int(b), 0))[0]
-        for i, b in enumerate(bits_perm) if b > 0]
-    ref = x @ jnp.asarray(np.stack(rows)).T
-    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
-    packed_bytes = sum(int(p[1].size) for p in packed)
-    hist = {b: int((np.asarray(channel_bits) == b).sum())
-            for b in (0, 2, 4, 8)}
-    print(f"\nmixed-precision layer: {kept}/128 channels kept ({hist})")
-    print(f"packed weight bytes: {packed_bytes} "
-          f"(fp32 baseline: {w.size*4}; "
-          f"{w.size*4/packed_bytes:.1f}x smaller)")
-    print(f"kernel-vs-fakequant deployment error: {100*rel:.2f}% "
-          f"(int8 activation quantization only)")
+    sp = SamplingParams(temperature=0.7, top_k=40, max_tokens=10, seed=1)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=6
+                                        ).astype(np.int32),
+                    sampling=sp, arrival=2 * i)
+            for i in range(4)]
+    t0 = time.time()
+    out = server.serve(reqs)
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"\nquantized continuous-batching decode: {len(reqs)} requests, "
+          f"{total} tokens in {dt:.2f}s "
+          f"({server.stats['decode_steps']} decode steps, 2 slots)")
+    for i in range(len(reqs)):
+        print(f"  req{i} (arrived step {reqs[i].arrival}): "
+              f"{[int(t) for t in out[i]]}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,8 @@ Hooks observe every phase: ``on_phase_start`` / ``on_step`` /
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import inspect
 from typing import Any, Optional
 
 import jax
@@ -152,12 +154,20 @@ class MetricsLog(Hook):
 
 
 class PeriodicEval(Hook):
-    """Run the phase's quick evaluation every ``every`` steps."""
+    """Run the phase's quick evaluation every ``every`` steps.
+
+    Keeps one per-phase cache dict that cache-aware ``quick_eval``
+    implementations (JointSearch, Finetune) use to skip re-discretizing an
+    assignment when the selection parameters haven't changed since the
+    last eval -- dense eval cadences stop paying the argmax + dict rebuild
+    for identical gammas.
+    """
 
     def __init__(self, every: int = 100, n_batches: int = 2):
         _check(every >= 1, f"PeriodicEval.every must be >= 1, got {every}")
         self.every = every
         self.n_batches = n_batches
+        self._caches: dict = {}
 
     def on_step(self, phase, state, step, metrics, train_state):
         if (step + 1) % self.every:
@@ -165,7 +175,12 @@ class PeriodicEval(Hook):
         quick = getattr(phase, "quick_eval", None)
         if quick is None:
             return
-        result = quick(state, train_state, n_batches=self.n_batches)
+        kwargs = {}
+        if "cache" in inspect.signature(quick).parameters:
+            kwargs["cache"] = self._caches.setdefault(
+                (phase.name, id(phase)), {})
+        result = quick(state, train_state, n_batches=self.n_batches,
+                       **kwargs)
         if result:
             state.log_metric(phase.name, step + 1, **result)
 
@@ -173,6 +188,32 @@ class PeriodicEval(Hook):
 def _emit(hooks, phase, state, step, metrics, train_state):
     for h in hooks:
         h.on_step(phase, state, step, metrics, train_state)
+
+
+def _plan_fingerprint(plan) -> str:
+    """Content hash of the plan pieces that determine its assignment
+    (object identity is not a safe cache key: CPython reuses addresses)."""
+    h = hashlib.blake2b(digest_size=16)
+    for grp in sorted(plan.channel_bits):
+        h.update(grp.encode())
+        h.update(np.asarray(plan.channel_bits[grp]).tobytes())
+    for name in sorted(plan.act_bits):
+        h.update(f"{name}={plan.act_bits[name]}".encode())
+    for name in sorted(plan.alphas):
+        h.update(f"{name}={plan.alphas[name]!r}".encode())
+    return h.hexdigest()
+
+
+def _mps_fingerprint(mps_params) -> str:
+    """Content hash of the selection parameters that determine the
+    discretized assignment (gamma + delta; alpha passes through assign
+    unchanged but is hashed too for safety)."""
+    h = hashlib.blake2b(digest_size=16)
+    for field in ("gamma", "delta", "alpha"):
+        for name in sorted(mps_params.get(field, {})):
+            h.update(name.encode())
+            h.update(np.asarray(mps_params[field][name]).tobytes())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -340,9 +381,19 @@ class JointSearch:
                                        state.pw, state.px, ctx, model=cm))
         return 1.0 / max(r_max, 1e-9)
 
-    def quick_eval(self, state, train_state, n_batches: int = 2):
+    def quick_eval(self, state, train_state, n_batches: int = 2,
+                   cache: Optional[dict] = None):
         sp = train_state["sp"]
-        assignment = discretize.assign(sp["mps"], state.pw, state.px)
+        assignment = None
+        if cache is not None:
+            fp = _mps_fingerprint(sp["mps"])
+            if cache.get("fp") == fp:
+                assignment = cache["assignment"]
+        if assignment is None:
+            assignment = discretize.assign(sp["mps"], state.pw, state.px)
+            if cache is not None:
+                cache["fp"] = fp
+                cache["assignment"] = assignment
         acc = evaluate(state.graph, sp["net"], state.spec, mode="quant",
                        assignment=assignment, pw=state.pw, px=state.px,
                        n_batches=n_batches)
@@ -455,10 +506,22 @@ class Finetune:
                                "CompressionPlan: run JointSearch first")
         return {"net": state.folded, "opt": self._opt().init(state.folded)}
 
-    def quick_eval(self, state, train_state, n_batches: int = 2):
+    def quick_eval(self, state, train_state, n_batches: int = 2,
+                   cache: Optional[dict] = None):
+        # the plan is fixed for the whole phase: build the jax-side
+        # assignment once per plan content
+        assignment = None
+        if cache is not None:
+            fp = _plan_fingerprint(state.plan)
+            if cache.get("plan_fp") == fp:
+                assignment = cache["assignment"]
+        if assignment is None:
+            assignment = state.plan.to_assignment(as_jax=True)
+            if cache is not None:
+                cache["plan_fp"] = fp
+                cache["assignment"] = assignment
         acc = evaluate(state.graph, train_state["net"], state.spec,
-                       mode="quant",
-                       assignment=state.plan.to_assignment(as_jax=True),
+                       mode="quant", assignment=assignment,
                        pw=state.pw, px=state.px, n_batches=n_batches)
         return {"acc_quant": acc}
 

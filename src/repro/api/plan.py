@@ -109,6 +109,16 @@ class CompressionPlan:
     def groups(self) -> tuple[str, ...]:
         return tuple(sorted(self.channel_bits))
 
+    # ------------------------------------------------------------ serving
+    def bind(self, weights: dict) -> dict:
+        """Pack ``weights`` (group name -> (C_out, C_in) float matrix) for
+        serving with this plan's channel bits + stored Fig. 3
+        permutations.  Returns ``{group: (packed_layers, perm, kept)}`` --
+        the per-layer half of what ``serve.engine.apply_plan`` binds into
+        a full LM tree."""
+        from repro.serve import engine
+        return engine.export_plan_layers(self, weights)
+
     # ------------------------------------------------------------ save/load
     def scalars(self) -> dict:
         """The JSON-able (non-array) half of the plan."""

@@ -52,8 +52,9 @@ def quantized_linear_apply(x: jax.Array, packed_layers) -> jax.Array:
     a list of per-precision sub-matmuls whose outputs concatenate along N.
 
     packed_layers: [(w_bits, wq_packed (Ni, K*bits/8), sw (Ni,)), ...]
+    Delegates to ``repro.nn.quantized.mixed_precision_matmul`` (per-row
+    activation scales, batch-invariant; a fully-pruned empty layer list
+    yields a zero-width (M, 0) result).
     """
-    xq, sx = quantize_activations(x)
-    outs = [quant_matmul(xq, wq, sw, sx, w_bits=bits)
-            for bits, wq, sw in packed_layers]
-    return jnp.concatenate(outs, axis=-1)
+    from repro.nn import quantized as nnq
+    return nnq.mixed_precision_matmul(x, packed_layers)

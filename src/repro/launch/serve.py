@@ -1,9 +1,14 @@
-"""Serving launcher: batched greedy decoding for any --arch (reduced
-configs on CPU; the same prefill/decode step functions lower on the
-production mesh in the dry-run).
+"""Serving launcher: plan-driven continuous-batching decode for any --arch
+(reduced configs on CPU; the same prefill/decode step functions lower on
+the production mesh in the dry-run).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b-smoke \
         --requests 4 --tokens 16
+
+    # quantized decode from a saved CompressionPlan (or the built-in demo
+    # plan), sampled at temperature 0.8, requests arriving over time:
+    PYTHONPATH=src python -m repro.launch.serve --plan demo \
+        --temperature 0.8 --top-k 40 --stream --arrival-gap 3
 """
 from __future__ import annotations
 
@@ -16,6 +21,15 @@ import numpy as np
 from repro.configs import registry
 from repro.models import lm
 from repro.serve import engine
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import Request
+
+
+def _load_plan(spec: str, cfg, params):
+    if spec == "demo":
+        return engine.synthetic_plan(cfg, params, bits=None, seed=0)
+    from repro.api.plan import CompressionPlan
+    return CompressionPlan.load(spec)
 
 
 def main():
@@ -25,24 +39,55 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots (requests beyond this queue)")
+    ap.add_argument("--plan", default=None,
+                    help="CompressionPlan stem/path for quantized decode, "
+                         "or 'demo' for a synthetic mixed-precision plan")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming-arrivals mode: requests join the "
+                         "queue over time instead of all at step 0")
+    ap.add_argument("--arrival-gap", type=int, default=2,
+                    help="decode steps between arrivals with --stream")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
     params = lm.init_params(cfg, jax.random.key(0))
-    eng = engine.ServeEngine(cfg, params, max_len=args.max_len)
+    plan = None
+    if args.plan is not None:
+        plan = _load_plan(args.plan, cfg, params)
+        print(f"[serve] quantized decode: {plan.summary()}")
+    server = engine.InferenceServer(cfg, params, plan=plan,
+                                    max_len=args.max_len,
+                                    max_batch=args.max_batch)
+
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab,
-                           size=(args.requests, args.prompt_len)
-                           ).astype(np.int32)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        max_tokens=args.tokens, seed=args.seed)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab,
+                              size=args.prompt_len).astype(np.int32)
+        arrival = i * args.arrival_gap if args.stream else 0
+        reqs.append(Request(uid=i, prompt=prompt, sampling=sp,
+                            arrival=arrival))
+
     t0 = time.time()
-    out = eng.generate(prompts, n_tokens=args.tokens)
+    out = server.serve(reqs)
     dt = time.time() - t0
-    total = args.requests * args.tokens
+    total = sum(len(v) for v in out.values())
+    mode = "stream" if args.stream else "batch"
+    quant = "quantized" if plan is not None else "float"
     print(f"[serve] {args.requests} requests x {args.tokens} tokens "
-          f"in {dt:.2f}s ({total/dt:.1f} tok/s batched)")
+          f"({mode}, {quant}) in {dt:.2f}s ({total/dt:.1f} tok/s, "
+          f"{server.stats['decode_steps']} decode steps)")
     for i in range(min(args.requests, 4)):
-        print(f"  req{i}: prompt={list(prompts[i][:6])}... "
-              f"completion={list(out[i][:8])}")
+        print(f"  req{i}: prompt={[int(t) for t in reqs[i].prompt[:6]]}... "
+              f"completion={[int(t) for t in out[i][:8]]}")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ from repro.configs.base import ArchConfig
 from repro.core import mps, sampling
 from repro.distributed import sharding
 from repro.nn import blocks
+from repro.nn import quantized as nnq
 
 
 # ---------------------------------------------------------------------------
@@ -264,10 +265,19 @@ def _make_effective_w(ctx: Optional[mps.SearchCtx], precisions):
     POINT OF USE: the cast output inherits the (FSDP-sharded) layout, so
     the per-layer all-gather moves bf16 instead of the f32 master -- this
     halves the dominant weight-gather collective bytes and the gathered-
-    weight memory for f32-master architectures (Perf iteration 4)."""
+    weight memory for f32-master architectures (Perf iteration 4).
+
+    Plan-quantized serving rides the same hook: when the parameter tree
+    was bound to a CompressionPlan (``serve.engine.apply_plan``), ``w`` is
+    a :class:`~repro.nn.quantized.PackedLinear` and the provider hands it
+    through untouched -- ``blocks.linear`` then serves the bit-packed
+    per-precision groups through ``mixed_precision_matmul``."""
     if ctx is None:
         def getw(pp):
-            return pp["w"].astype(jnp.bfloat16)
+            w = pp["w"]
+            if isinstance(w, nnq.PackedLinear):
+                return w
+            return w.astype(jnp.bfloat16)
         return getw
 
     def getw(pp):
@@ -366,6 +376,36 @@ def _run_stack(cfg, pattern, stack_params, x, *, mode, caches, pos,
     return x, new_caches
 
 
+def _run_stack_unrolled(cfg, pattern, per_sb_params, x, *, mode, caches,
+                        pos, enc_out, getw):
+    """Python-unrolled counterpart of :func:`_run_stack` for parameter
+    trees whose super-blocks are a tuple of per-block trees instead of one
+    stacked pytree.  Plan-quantized serving needs this: each block's
+    :class:`~repro.nn.quantized.PackedLinear` buffers have layer-dependent
+    shapes (different per-precision channel counts), so they cannot be
+    stacked for a ``lax.scan``.  Caches keep the stacked ``(nsb, ...)``
+    layout of :func:`init_caches`."""
+    per_sb_caches = []
+    for j, blk_params in enumerate(per_sb_params):
+        blk_cache = None if caches is None else \
+            jax.tree.map(lambda a: a[j], caches)
+        new_caches = {}
+        for i, spec in enumerate(pattern):
+            cache_i = None if blk_cache is None else blk_cache.get(f"l{i}")
+            x, nc = _layer_apply(cfg, spec, blk_params[f"l{i}"], x,
+                                 mode=mode, cache=cache_i, pos=pos,
+                                 enc_out=enc_out, getw=getw)
+            if nc is not None:
+                new_caches[f"l{i}"] = nc
+        per_sb_caches.append(new_caches or None)
+    if any(c is not None for c in per_sb_caches):
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                               *per_sb_caches)
+    else:
+        stacked = None
+    return x, stacked
+
+
 def _has_gamma(tree) -> bool:
     if isinstance(tree, dict):
         return "gamma" in tree or any(_has_gamma(v) for v in tree.values())
@@ -423,10 +463,19 @@ def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
         enc_out = _encode(cfg, params, batch, getw)
     x = _embed_in(cfg, params, batch)
     remat = cfg.remat and mode == "train"
-    x, new_caches = _run_stack(
-        cfg, block_pattern(cfg), params["blocks"], x, mode=mode,
-        caches=caches, pos=pos, enc_out=enc_out, getw=getw, remat=remat,
-        blk_logical=_sliced_block_logical(cfg, _has_gamma(params["blocks"])))
+    if isinstance(params["blocks"], (list, tuple)):
+        # plan-quantized serving tree (serve.engine.apply_plan): one tree
+        # per super-block, PackedLinear weights, Python-unrolled
+        x, new_caches = _run_stack_unrolled(
+            cfg, block_pattern(cfg), params["blocks"], x, mode=mode,
+            caches=caches, pos=pos, enc_out=enc_out, getw=getw)
+    else:
+        x, new_caches = _run_stack(
+            cfg, block_pattern(cfg), params["blocks"], x, mode=mode,
+            caches=caches, pos=pos, enc_out=enc_out, getw=getw,
+            remat=remat,
+            blk_logical=_sliced_block_logical(
+                cfg, _has_gamma(params["blocks"])))
     x = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     if logits_mode == "hidden":
         return x, new_caches
@@ -602,7 +651,76 @@ def prefill(cfg: ArchConfig, params, batch):
 
 def decode_step(cfg: ArchConfig, params, token_batch, caches, pos):
     """One-token decode. token_batch: {"tokens": (B, 1)} (or embeddings);
-    pos: () int32 current position. Returns (logits (B, 1, V), caches)."""
+    pos: () int32 shared position, or (B,) int32 per-sequence positions
+    (continuous batching: every slot decodes at its own offset).
+    Returns (logits (B, 1, V), caches)."""
     logits, new_caches = forward(cfg, params, token_batch, mode="decode",
                                  caches=caches, pos=pos)
     return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# CompressionPlan group naming over the LM parameter tree
+# ---------------------------------------------------------------------------
+#
+# Every 2-D projection that carries per-channel selection parameters in
+# search mode is a plan group.  Weights are stacked (n_superblocks, K, N),
+# so each (weight, super-block) pair gets its own group, named by the
+# dotted parameter path plus the super-block index:
+#
+#     blocks.l0.mixer.wq.sb3, blocks.l1.ffn.w_down.sb0, ...
+#
+# MoE expert banks (4-D stacked) and the router stay float at serving
+# time; embed / lm_head never carry gammas (mps_ok=False).
+
+
+def _walk_plan_weights(cfg: ArchConfig, params):
+    """Yield ``(dotted_path, template_node, param_node)`` for every
+    plan-servable projection (gamma-carrying, 2-D per super-block)."""
+    tmpl = abstract_params(cfg, mps_on=True)["blocks"]
+
+    def visit(tnode, pnode, path):
+        if not isinstance(tnode, dict):
+            return
+        if "w" in tnode and "gamma" in tnode and tnode["w"].ndim == 3:
+            yield path, tnode, pnode
+            return
+        for k, tv in tnode.items():
+            if isinstance(tv, dict):
+                yield from visit(tv, pnode[k], f"{path}.{k}")
+
+    for lname in tmpl:
+        yield from visit(tmpl[lname], params["blocks"][lname],
+                         f"blocks.{lname}")
+
+
+def serve_weight_groups(cfg: ArchConfig, params) -> dict:
+    """Plan-group name -> ``(C_out, C_in)`` float matrix for every
+    quantizable LM projection -- the ``weights`` dict that
+    ``serve.engine.export_plan_layers`` / ``CompressionPlan.bind`` take."""
+    out = {}
+    for path, _, pnode in _walk_plan_weights(cfg, params):
+        w = np.asarray(pnode["w"], np.float32)        # (nsb, K, N)
+        for j in range(w.shape[0]):
+            out[f"{path}.sb{j}"] = w[j].T
+    return out
+
+
+def extract_plan(cfg: ArchConfig, params, px=(8,), meta=None):
+    """Discretize an LM's per-channel selection logits into a
+    :class:`~repro.api.plan.CompressionPlan` (paper Eq. 7/8 on the LM
+    track).  ``params`` must carry gammas (``init_params(mps_on=True)``,
+    e.g. after a ``make_train_step(search=True)`` run)."""
+    from repro.api.plan import CompressionPlan
+
+    pw = np.asarray(cfg.mps_precisions)
+    gamma = {}
+    for path, _, pnode in _walk_plan_weights(cfg, params):
+        g = np.asarray(pnode["gamma"], np.float32)    # (nsb, C, |P|)
+        bits = pw[np.argmax(g, axis=-1)]              # (nsb, C)
+        for j in range(bits.shape[0]):
+            gamma[f"{path}.sb{j}"] = bits[j]
+    assignment = {"gamma": gamma, "delta": {}, "alpha": {}}
+    base = {"track": "lm", "arch": cfg.name}
+    return CompressionPlan.from_assignment(
+        assignment, cfg.mps_precisions, px, meta={**base, **(meta or {})})

@@ -28,6 +28,25 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding
+from repro.nn import quantized as nnq
+
+# ---------------------------------------------------------------------------
+# linear application (dense or plan-quantized)
+# ---------------------------------------------------------------------------
+
+
+def linear(x: jax.Array, w) -> jax.Array:
+    """y[..., n] = x[..., k] @ w[k, n].
+
+    ``w`` is either a dense array (the training / float-serving path) or a
+    :class:`repro.nn.quantized.PackedLinear` -- the plan-quantized serving
+    path, where the weight provider hands back bit-packed per-precision
+    groups that are served through ``mixed_precision_matmul``.
+    """
+    if isinstance(w, nnq.PackedLinear):
+        return w(x)
+    return jnp.einsum("bsd,dk->bsk", x, w)
+
 
 # ---------------------------------------------------------------------------
 # norms / rope
@@ -159,7 +178,8 @@ def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                      pos: jax.Array, *, window: int = 0,
                      chunked: bool = False, cap: float = 0.0) -> jax.Array:
     """One-token attention. q: (B, 1, H, D); cache: (B, S, Hkv, D);
-    pos: () index of the current token."""
+    pos: () shared index of the current token, or (B,) per-sequence indices
+    (continuous batching: each slot decodes at its own position)."""
     b, s, hkv, d = cache_k.shape
     h = q.shape[2]
     k = _repeat_kv(cache_k, h // hkv)
@@ -168,12 +188,14 @@ def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                         k.astype(jnp.float32)) / math.sqrt(d)
     logits = softcap(logits, cap)
     pos_k = jnp.arange(s)
-    mask = pos_k <= pos
+    posv = jnp.asarray(pos)
+    pos_b = posv[None] if posv.ndim == 0 else posv          # (1,) or (B,)
+    mask = pos_k[None, :] <= pos_b[:, None]                 # (1|B, S)
     if window > 0 and not chunked:
-        mask &= pos_k > pos - window
+        mask &= pos_k[None, :] > pos_b[:, None] - window
     if window > 0 and chunked:
-        mask &= (pos_k // window) == (pos // window)
-    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+        mask &= (pos_k[None, :] // window) == (pos_b[:, None] // window)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -199,9 +221,9 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
     getw = effective_w or (lambda pp: pp["w"])
     kv_src = kv_input if kv_input is not None else x
 
-    q = jnp.einsum("bsd,dk->bsk", x, getw(p["wq"]))
-    kk = jnp.einsum("bsd,dk->bsk", kv_src, getw(p["wk"]))
-    vv = jnp.einsum("bsd,dk->bsk", kv_src, getw(p["wv"]))
+    q = linear(x, getw(p["wq"]))
+    kk = linear(kv_src, getw(p["wk"]))
+    vv = linear(kv_src, getw(p["wv"]))
     q = sharding.constrain(q, "batch", None, "heads_flat")
     q = q.reshape(b, s, h, hd)
     kk = kk.reshape(b, kv_src.shape[1], hkv, hd)
@@ -226,13 +248,23 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
             new_cache = {"k": kk, "v": vv}
     elif mode == "decode":
         posn = jnp.asarray(pos)
-        q = rope(q, posn[None], cfg.rope_theta)
-        kk = rope(kk, posn[None], cfg.rope_theta)
+        # () pos: one shared position; (B,) pos: per-slot positions
+        # (continuous batching), rope/cache-write/mask all row-wise.
+        pos_rope = posn[None] if posn.ndim == 0 else posn[:, None]
+        q = rope(q, pos_rope, cfg.rope_theta)
+        kk = rope(kk, pos_rope, cfg.rope_theta)
         if cache is not None:
             kk = kk.astype(cache["k"].dtype)
             vv = vv.astype(cache["v"].dtype)
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kk, posn, 1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vv, posn, 1)
+            if posn.ndim == 0:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kk,
+                                                         posn, 1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vv,
+                                                         posn, 1)
+            else:
+                rows = jnp.arange(b)
+                ck = cache["k"].at[rows, posn].set(kk[:, 0])
+                cv = cache["v"].at[rows, posn].set(vv[:, 0])
         else:
             ck, cv = kk, vv
         new_cache = {"k": ck, "v": cv}
@@ -247,7 +279,7 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
         new_cache = {"k": kk, "v": vv} if mode == "prefill" else None
 
     out = out.reshape(b, s, h * hd)
-    y = jnp.einsum("bsk,kd->bsd", out, getw(p["wo"]))
+    y = linear(out, getw(p["wo"]))
     return y, new_cache
 
 
@@ -258,11 +290,11 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
 
 def ffn_swiglu(p: dict, x: jax.Array, effective_w=None) -> jax.Array:
     getw = effective_w or (lambda pp: pp["w"])
-    g = jnp.einsum("bsd,df->bsf", x, getw(p["w_gate"]))
-    u = jnp.einsum("bsd,df->bsf", x, getw(p["w_up"]))
+    g = linear(x, getw(p["w_gate"]))
+    u = linear(x, getw(p["w_up"]))
     h = jax.nn.silu(g) * u
     h = sharding.constrain(h, "batch", None, "mlp")
-    return jnp.einsum("bsf,fd->bsd", h, getw(p["w_down"]))
+    return linear(h, getw(p["w_down"]))
 
 
 def _moe_local(x, router_w, w_gate, w_up, w_down, *, n_experts: int,
@@ -384,11 +416,11 @@ def mamba2_layer(p: dict, x: jax.Array, cfg, *, mode: str = "train",
     di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
     nh = cfg.ssm_heads
 
-    z = jnp.einsum("bsd,dk->bsk", x, getw(p["in_z"]))       # (B,S,di)
-    xs_pre = jnp.einsum("bsd,dk->bsk", x, getw(p["in_x"]))  # (B,S,di)
-    bb_pre = jnp.einsum("bsd,dk->bsk", x, getw(p["in_b"]))  # (B,S,N)
-    cc_pre = jnp.einsum("bsd,dk->bsk", x, getw(p["in_c"]))  # (B,S,N)
-    dt = jnp.einsum("bsd,dk->bsk", x, getw(p["in_dt"]))     # (B,S,H)
+    z = linear(x, getw(p["in_z"]))                          # (B,S,di)
+    xs_pre = linear(x, getw(p["in_x"]))                     # (B,S,di)
+    bb_pre = linear(x, getw(p["in_b"]))                     # (B,S,N)
+    cc_pre = linear(x, getw(p["in_c"]))                     # (B,S,N)
+    dt = linear(x, getw(p["in_dt"]))                        # (B,S,H)
     z = sharding.constrain(z, "batch", None, "ssm_inner")
     xs_pre = sharding.constrain(xs_pre, "batch", None, "ssm_inner")
 
@@ -425,7 +457,17 @@ def mamba2_layer(p: dict, x: jax.Array, cfg, *, mode: str = "train",
         # the carried running state is exactly the inter-chunk recurrence
         # that kernels/ssd_scan implements standalone for the TPU path.
         q = min(cfg.ssm_chunk, s)
-        assert s % q == 0
+        if mode == "train":
+            # training shapes must tile exactly -- fail loudly, a silent
+            # divisor fallback would quietly shrink the chunk
+            assert s % q == 0, (s, q)
+        else:
+            # serving prefill accepts arbitrary prompt lengths: largest
+            # divisor of s that fits the chunk budget (prime lengths
+            # degrade toward q=1 -- correct but slow; exact-length
+            # prefill keeps the SSM state unpolluted by padding)
+            while s % q:
+                q -= 1
         nc = s // q
         tri = jnp.tril(jnp.ones((q, q), bool))
         # (nc, B, Q, ...) chunk-major for the scan
@@ -468,5 +510,5 @@ def mamba2_layer(p: dict, x: jax.Array, cfg, *, mode: str = "train",
     y = y.astype(x.dtype) * jax.nn.silu(z)
     y = rmsnorm(y, p["ssm_norm"], cfg.norm_eps)
     y = sharding.constrain(y, "batch", None, "ssm_inner")
-    out = jnp.einsum("bsk,kd->bsd", y, getw(p["out_proj"]))
+    out = linear(y, getw(p["out_proj"]))
     return out, new_state

@@ -1,12 +1,20 @@
-"""Batched serving engine + mixed-precision quantized-weight serving.
+"""Plan-driven serving stack.
 
-Two layers:
-  * ServeEngine -- prefill + step-by-step batched decode for any LM arch
-    (greedy sampling), KV caches managed per request batch.
-  * export/apply of *discretized* layers (paper Fig. 3): after the search
-    assigns per-channel precisions, weights are reordered into contiguous
-    per-precision groups, bit-packed, and served through the quant_matmul
-    kernel (TPU) / oracle (CPU).
+Layers:
+  * :class:`InferenceServer` -- the serving API.  Takes ``(cfg, params,
+    plan)``; owns a continuous-batching scheduler (new requests are
+    admitted into decode slots as others finish), fused prefill (one
+    full-sequence forward via ``launch.steps.make_prefill_step`` instead of
+    a per-token loop), per-request :class:`SamplingParams`, and -- when a
+    :class:`~repro.api.plan.CompressionPlan` is given -- end-to-end
+    quantized decode: every planned projection is bound to a
+    :class:`~repro.nn.quantized.PackedLinear` and served through
+    ``mixed_precision_matmul`` inside the jitted forward.
+  * :func:`apply_plan` -- binds a plan into an LM parameter tree.
+  * export/apply of *discretized* layers (paper Fig. 3): per-layer packing
+    shared with the in-forward path via ``repro.nn.quantized``.
+  * :class:`ServeEngine` -- thin backward-compatible shim over
+    :class:`InferenceServer` (greedy, all-at-once batch).
 """
 from __future__ import annotations
 
@@ -16,41 +24,275 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import discretize, quantizers
-from repro.kernels.quant_matmul import ops as qops
+from repro.launch import steps
 from repro.models import lm
+from repro.nn import quantized as nnq
+from repro.serve.sampling import SamplingParams, make_rng, sample_token
+from repro.serve.scheduler import Request, Scheduler, SlotState
 
+
+# ---------------------------------------------------------------------------
+# plan binding: CompressionPlan -> servable parameter tree
+# ---------------------------------------------------------------------------
+
+def apply_plan(cfg, params, plan, strict: bool = True):
+    """Bind a :class:`CompressionPlan` into an LM parameter tree.
+
+    Every plan group (see ``lm.serve_weight_groups`` for the naming) has
+    its float projection replaced by a bit-packed
+    :class:`~repro.nn.quantized.PackedLinear` built from the plan's
+    recorded channel bits AND its stored Fig. 3 permutation, so a
+    saved+loaded plan serves byte-identically to the in-memory one.
+
+    Because packed buffer shapes differ per layer, the returned tree keeps
+    ``blocks`` as a *tuple of per-super-block trees* (the forward unrolls
+    instead of scanning).  Gammas are dropped; non-quantizable weights
+    (MoE expert banks, routers, norms) are sliced per super-block and stay
+    float.  ``strict=False`` leaves groups missing from the plan in float
+    instead of raising.
+    """
+    tmpl = lm.abstract_params(cfg, mps_on=True)["blocks"]
+    nsb = lm.n_superblocks(cfg)
+
+    def build(tnode, pnode, path, j):
+        if isinstance(pnode, dict):
+            if (isinstance(tnode, dict) and "w" in tnode
+                    and "gamma" in tnode and tnode["w"].ndim == 3):
+                group = f"{path}.sb{j}"
+                if group in plan.channel_bits:
+                    w = np.asarray(pnode["w"], np.float32)[j]   # (K, N)
+                    return {"w": nnq.PackedLinear.from_dense(
+                        w, plan.channel_bits[group],
+                        perm=plan.permutations[group])}
+                if strict:
+                    raise KeyError(
+                        f"plan has no group {group!r} (plan groups: "
+                        f"{len(plan.channel_bits)}; pass strict=False to "
+                        f"serve unplanned projections in float)")
+                return {"w": jnp.asarray(pnode["w"][j])}
+            return {k: build(tnode.get(k) if isinstance(tnode, dict)
+                             else None, v, f"{path}.{k}", j)
+                    for k, v in pnode.items() if k != "gamma"}
+        return pnode[j]          # stacked (nsb, ...) leaf -> this block's
+
+    blocks_q = tuple(
+        {lname: build(tmpl[lname], params["blocks"][lname],
+                      f"blocks.{lname}", j)
+         for lname in params["blocks"]}
+        for j in range(nsb))
+    out = dict(params)
+    out["blocks"] = blocks_q
+    return out
+
+
+def synthetic_plan(cfg, params, bits: int | None = None, seed: int = 0,
+                   pw=(0, 2, 4, 8)):
+    """A deterministic demo/benchmark plan over the LM's plan groups:
+    uniform ``bits`` everywhere, or (``bits=None``) a seeded random mix
+    drawn from ``pw``.  Not searched -- useful for smoke tests, the
+    ``--plan demo`` launcher mode and throughput benchmarks."""
+    from repro.api.plan import CompressionPlan
+
+    rng = np.random.default_rng(seed)
+    # favour the higher precisions (linearly), light pruning mass on 0-bit
+    weights_p = np.arange(1, len(pw) + 1, dtype=np.float64)
+    p = weights_p / weights_p.sum()
+    gamma = {}
+    for grp, w in lm.serve_weight_groups(cfg, params).items():
+        c = w.shape[0]
+        if bits is None:
+            gamma[grp] = rng.choice(pw, size=c, p=p).astype(np.int64)
+        else:
+            gamma[grp] = np.full((c,), int(bits), np.int64)
+    assignment = {"gamma": gamma, "delta": {}, "alpha": {}}
+    return CompressionPlan.from_assignment(
+        assignment, pw, (8,), meta={"track": "lm", "arch": cfg.name,
+                                    "synthetic": True,
+                                    "bits": bits, "seed": seed})
+
+
+# ---------------------------------------------------------------------------
+# the serving API
+# ---------------------------------------------------------------------------
+
+class InferenceServer:
+    """Plan-driven LM serving with continuous batching.
+
+    ``plan=None`` serves float weights; a :class:`CompressionPlan` switches
+    the whole decode path to quantized execution (see :func:`apply_plan`).
+    Decoder-only token-frontend architectures only (enc-dec and
+    vision/audio frontends need prompt-side encoders the request schema
+    doesn't carry yet).
+    """
+
+    def __init__(self, cfg, params, plan=None, *, max_len: int = 512,
+                 max_batch: int = 8, strict_plan: bool = True):
+        if cfg.is_encdec or cfg.frontend != "none":
+            raise NotImplementedError(
+                f"InferenceServer serves decoder-only token-frontend "
+                f"architectures; got {cfg.name} (family={cfg.family}, "
+                f"frontend={cfg.frontend})")
+        self.cfg = cfg
+        self.plan = plan
+        self.max_len = int(max_len)
+        self.max_batch = int(max_batch)
+        self.params = params if plan is None else apply_plan(
+            cfg, params, plan, strict=strict_plan)
+        self.stats: dict = {}
+
+        prefill_step = steps.make_prefill_step(cfg)
+
+        def prefill_insert(params, tokens, caches, slot):
+            """Fused prefill of one request + KV/SSM insertion into its
+            decode slot (compiled once per distinct prompt length)."""
+            logits, pcaches = prefill_step(params, {"tokens": tokens})
+
+            def ins(big, small):
+                small = small.astype(big.dtype)
+                starts = (0, slot) + (0,) * (big.ndim - 2)
+                return jax.lax.dynamic_update_slice(big, small, starts)
+
+            return logits, jax.tree.map(ins, caches, pcaches)
+
+        # donate the cache tree: decode updates it in place instead of
+        # copying the full (nsb, max_batch, max_len, ...) buffers per
+        # token (no-op on CPU, where XLA ignores donation)
+        self._prefill_insert = jax.jit(prefill_insert, donate_argnums=(2,))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(cfg, p, t, c, pos),
+            donate_argnums=(2,))
+
+    # ------------------------------------------------------------ serving
+    def serve(self, requests) -> dict:
+        """Run every request to completion with continuous batching.
+
+        Requests whose ``arrival > 0`` join the queue at that decode step
+        (streaming-arrivals mode); more requests than ``max_batch`` simply
+        queue for free slots.  Returns ``{uid: np.ndarray(tokens)}``.
+        """
+        sched = Scheduler(self.max_batch, self.max_len)
+        for r in requests:
+            sched.submit(r)
+        caches = lm.init_caches(self.cfg, self.max_batch, self.max_len)
+        vocab = self.cfg.vocab
+        now = 0
+        n_steps = n_admitted = 0
+
+        while sched.has_work:
+            # admit every arrived request that fits a free slot
+            while True:
+                adm = sched.pop_admissible(now)
+                if adm is None:
+                    break
+                req, slot = adm
+                tokens = jnp.asarray(np.asarray(req.prompt, np.int32))[None]
+                logits, caches = self._prefill_insert(
+                    self.params, tokens, caches,
+                    jnp.asarray(slot, jnp.int32))
+                row = np.asarray(logits.astype(jnp.float32))[0, -1, :vocab]
+                rng = make_rng(req.sampling, req.uid)
+                tok = sample_token(row, req.sampling, rng)
+                st = SlotState(request=req, slot=slot,
+                               pos=int(np.asarray(req.prompt).size),
+                               remaining=req.sampling.max_tokens - 1,
+                               last_token=tok, out=[tok], rng=rng)
+                n_admitted += 1
+                sched.activate(slot, st)
+                if st.remaining <= 0:
+                    sched.complete(slot)
+
+            active = sched.active
+            if not active:
+                nxt = sched.next_arrival
+                if nxt is None:
+                    break
+                now = max(now + 1, nxt)   # idle: jump to the next arrival
+                continue
+
+            # one batched decode step over the active slots
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            pos = np.zeros((self.max_batch,), np.int32)
+            for st in active:
+                tokens[st.slot, 0] = st.last_token
+                pos[st.slot] = st.pos
+            logits, caches = self._decode(
+                self.params, {"tokens": jnp.asarray(tokens)}, caches,
+                jnp.asarray(pos))
+            rows = np.asarray(logits.astype(jnp.float32))[:, -1, :vocab]
+            n_steps += 1
+            for st in active:
+                st.pos += 1
+                tok = sample_token(rows[st.slot], st.request.sampling,
+                                   st.rng)
+                st.out.append(tok)
+                st.last_token = tok
+                st.remaining -= 1
+                if st.remaining <= 0:
+                    sched.complete(st.slot)
+                elif st.pos >= self.max_len:
+                    st.truncated = True
+                    sched.complete(st.slot)
+            now += 1
+
+        self.stats = {"decode_steps": n_steps, "admitted": n_admitted,
+                      "generated": sum(len(s.out)
+                                       for s in sched.finished.values())}
+        return {uid: np.asarray(s.out, np.int32)
+                for uid, s in sched.finished.items()}
+
+    def generate(self, prompts: np.ndarray, sampling=None,
+                 n_tokens: int | None = None) -> np.ndarray:
+        """Batch convenience: (B, S0) prompts -> (B, max_tokens) tokens.
+
+        ``sampling`` is one :class:`SamplingParams` shared by every prompt
+        or a per-prompt list; default greedy ``n_tokens`` continuation.
+        """
+        prompts = np.asarray(prompts, np.int32)
+        b = prompts.shape[0]
+        if sampling is None:
+            sampling = SamplingParams(max_tokens=n_tokens or 16)
+        per = list(sampling) if isinstance(sampling, (list, tuple)) \
+            else [sampling] * b
+        if len(per) != b:
+            raise ValueError(f"got {len(per)} SamplingParams for "
+                             f"{b} prompts")
+        if len({sp.max_tokens for sp in per}) > 1:
+            raise ValueError(
+                "generate() stacks completions into one (B, max_tokens) "
+                "array, so per-prompt max_tokens must match; use serve() "
+                "for heterogeneous token budgets")
+        reqs = [Request(uid=i, prompt=prompts[i], sampling=per[i])
+                for i in range(b)]
+        res = self.serve(reqs)
+        return np.stack([res[i] for i in range(b)])
+
+
+# ---------------------------------------------------------------------------
+# legacy shim
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class ServeEngine:
+    """Deprecated thin shim over :class:`InferenceServer` (greedy,
+    all-at-once batch).  New code should use InferenceServer directly."""
+
     cfg: object
     params: object
     max_len: int = 512
 
     def __post_init__(self):
-        self._decode = jax.jit(
-            lambda p, t, c, pos: lm.decode_step(self.cfg, p, t, c, pos))
+        self._servers: dict[int, InferenceServer] = {}
 
     def generate(self, prompts: np.ndarray, n_tokens: int = 16):
         """prompts: (B, S0) int32. Greedy continuation of n_tokens."""
-        b, s0 = prompts.shape
-        caches = lm.init_caches(self.cfg, b, self.max_len)
-        # prefill by stepping (simple + exact; a fused prefill exists in
-        # launch/steps.py for the dry-run path)
-        logits = None
-        for i in range(s0):
-            tok = {"tokens": jnp.asarray(prompts[:, i:i + 1])}
-            logits, caches = self._decode(self.params, tok, caches,
-                                          jnp.asarray(i))
-        out = []
-        cur = jnp.argmax(logits[:, -1, : self.cfg.vocab], -1)[:, None]
-        for i in range(n_tokens):
-            out.append(np.asarray(cur))
-            logits, caches = self._decode(
-                self.params, {"tokens": cur}, caches,
-                jnp.asarray(s0 + i))
-            cur = jnp.argmax(logits[:, -1, : self.cfg.vocab], -1)[:, None]
-        return np.concatenate(out, axis=1)
+        b = int(np.asarray(prompts).shape[0])
+        server = self._servers.get(b)
+        if server is None:
+            server = InferenceServer(self.cfg, self.params,
+                                     max_len=self.max_len, max_batch=b)
+            self._servers[b] = server
+        return server.generate(prompts,
+                               SamplingParams(max_tokens=n_tokens))
 
 
 # ---------------------------------------------------------------------------
@@ -63,50 +305,33 @@ def export_mixed_precision_layer(w: np.ndarray, channel_bits: np.ndarray,
 
     Returns (packed_layers, perm, kept) where packed_layers is
     [(bits, wq_packed, scales), ...] in ascending-bits order after the
-    Fig. 3 reordering; pruned (0-bit) channels are dropped entirely.
+    Fig. 3 reordering; pruned (0-bit) channels are dropped entirely (a
+    fully-pruned layer packs to an empty list with ``kept == 0``).
     ``perm`` overrides the reorder permutation (e.g. the one recorded in a
     :class:`~repro.api.plan.CompressionPlan`); by default it is recomputed
-    from ``channel_bits``.
+    from ``channel_bits``.  Packing is shared with the in-forward
+    :class:`~repro.nn.quantized.PackedLinear` path, so per-layer exports
+    and plan-driven decode are byte-identical.
     """
-    if perm is None:
-        perm = discretize.reorder_permutations(
-            {"gamma": {"l": channel_bits}})["l"]
-    w_sorted = np.asarray(w)[perm]
-    bits_sorted = np.asarray(channel_bits)[perm]
-    packed = []
-    for b in sorted(set(int(x) for x in bits_sorted if x > 0)):
-        rows = w_sorted[bits_sorted == b]
-        qi, scale = quantizers.integerize_weights(jnp.asarray(rows), b, 0)
-        k = rows.shape[1]
-        per = 8 // b
-        pad = (-k) % per
-        qi_np = np.asarray(qi)
-        if pad:
-            qi_np = np.pad(qi_np, ((0, 0), (0, pad)))
-        packed.append((b, jnp.asarray(qops.pack_weights(qi_np, b)),
-                       jnp.asarray(scale[:, 0])))
-    kept = int(np.sum(bits_sorted > 0))
-    return packed, perm, kept
+    return nnq.pack_channelwise(w, channel_bits, perm=perm)
 
 
 def mixed_precision_matmul(x: jax.Array, packed_layers) -> jax.Array:
     """Serve y = x @ W^T for a reordered mixed-precision layer: one
-    quant_matmul per precision group, outputs concatenated (Fig. 3)."""
-    xq, sx = qops.quantize_activations(x)
-    outs = []
-    for bits, wq, sw in packed_layers:
-        outs.append(qops.quant_matmul(xq, wq, sw, sx, w_bits=bits))
-    return jnp.concatenate(outs, axis=-1)
+    quant_matmul per precision group, outputs concatenated (Fig. 3).
+    Activations are int8-quantized per row (batch-invariant); an empty
+    ``packed_layers`` returns a zero-width (M, 0) result."""
+    return nnq.mixed_precision_matmul(x, packed_layers)
 
 
 def export_plan_layers(plan, weights: dict) -> dict:
     """Export every layer of a :class:`CompressionPlan` for serving.
 
     ``weights`` maps gamma-group name -> (C_out, C_in) float matrix (conv
-    kernels reshaped to 2-D). Uses the plan's recorded per-group channel
-    bits AND its stored Fig. 3 permutations, so a saved+loaded plan packs
-    byte-identically to the in-memory one. Returns
-    {group: (packed_layers, perm, kept)}.
+    kernels reshaped to 2-D; for the LM, ``lm.serve_weight_groups``).
+    Uses the plan's recorded per-group channel bits AND its stored Fig. 3
+    permutations, so a saved+loaded plan packs byte-identically to the
+    in-memory one. Returns {group: (packed_layers, perm, kept)}.
     """
     out = {}
     for grp, w in weights.items():

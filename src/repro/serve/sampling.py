@@ -1,0 +1,69 @@
+"""Per-request sampling configuration + host-side token sampling.
+
+``SamplingParams`` replaces the hard-coded argmax of the old ServeEngine:
+every request carries its own (temperature, top-k, max_tokens, seed), and
+the engine draws from a per-request ``numpy`` generator so a request
+samples the identical token stream whether it is decoded alone or inside a
+continuous batch (the parity the serving tests assert).
+
+Sampling runs on the host over the (small) vocab row of the current token.
+At production vocab sizes the draw should move on-device (batched gumbel
+top-k over the sharded logits); that is an open ROADMAP item -- the
+SamplingParams surface is already shaped for it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How one request turns logits into tokens.
+
+    temperature == 0 is greedy (argmax); top_k == 0 means no top-k
+    truncation; ``seed`` keys the per-request random stream.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    max_tokens: int = 16
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"SamplingParams.temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"SamplingParams.top_k must be >= 0, "
+                             f"got {self.top_k}")
+        if self.max_tokens < 1:
+            raise ValueError(f"SamplingParams.max_tokens must be >= 1, "
+                             f"got {self.max_tokens}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def make_rng(params: SamplingParams, uid: int) -> np.random.Generator:
+    """The request's random stream: a function of (seed, uid) only, so
+    re-serving the same request replays identical draws."""
+    return np.random.default_rng((int(params.seed), int(uid)))
+
+
+def sample_token(logits: np.ndarray, params: SamplingParams,
+                 rng: np.random.Generator) -> int:
+    """Draw one token id from a (V,) logits row."""
+    logits = np.asarray(logits, np.float64)
+    if params.greedy:
+        return int(np.argmax(logits))
+    z = logits / params.temperature
+    if 0 < params.top_k < z.size:
+        kth = np.partition(z, -params.top_k)[-params.top_k]
+        z = np.where(z >= kth, z, -np.inf)
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    return int(rng.choice(z.size, p=p))

@@ -1,0 +1,127 @@
+"""Continuous-batching scheduler: pure bookkeeping, model-agnostic.
+
+The scheduler owns the request queue and the fixed pool of decode slots.
+The :class:`~repro.serve.engine.InferenceServer` drives it: every decode
+step it first admits pending requests into free slots (the engine prefills
+each admitted request and writes its caches into the slot), then runs one
+batched decode step over the active slots and retires the ones that
+finished.  Requests may arrive over time (``Request.arrival`` in decode
+steps) -- the streaming-arrivals serving mode -- and more requests than
+slots simply queue.
+
+Keeping this free of any jax/model state makes admission, arrival gating
+and slot reuse unit-testable in isolation.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.sampling import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request."""
+
+    uid: int
+    prompt: np.ndarray                 # (S0,) int32 token ids
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    arrival: int = 0                   # decode step at which it arrives
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Per-slot decode state of an admitted request."""
+
+    request: Request
+    slot: int
+    pos: int                           # next cache write position
+    remaining: int                     # tokens still to sample
+    last_token: int
+    out: list
+    rng: np.random.Generator
+    truncated: bool = False
+
+
+class Scheduler:
+    """Admission + slot lifecycle for a ``max_batch``-slot decode pool."""
+
+    def __init__(self, max_batch: int, max_len: int):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_len < 2:
+            raise ValueError(f"max_len must be >= 2, got {max_len}")
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.slots: list[Optional[SlotState]] = [None] * max_batch
+        self.pending: collections.deque[Request] = collections.deque()
+        self.finished: dict[int, SlotState] = {}
+
+    # ------------------------------------------------------------- submit
+    def submit(self, request: Request):
+        prompt = np.asarray(request.prompt)
+        if prompt.ndim != 1 or prompt.size < 1:
+            raise ValueError(f"request {request.uid}: prompt must be a "
+                             f"non-empty 1-D token array, got shape "
+                             f"{prompt.shape}")
+        need = prompt.size + request.sampling.max_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt ({prompt.size}) + "
+                f"max_tokens ({request.sampling.max_tokens}) exceeds "
+                f"max_len ({self.max_len})")
+        if request.uid in self.finished or any(
+                s is not None and s.request.uid == request.uid
+                for s in self.slots) or any(
+                r.uid == request.uid for r in self.pending):
+            raise ValueError(f"duplicate request uid {request.uid}")
+        self.pending.append(request)
+
+    # ---------------------------------------------------------- admission
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def pop_admissible(self, now: int):
+        """Next (request, slot) admissible at decode step ``now`` (FIFO
+        among arrived requests), or None."""
+        slot = self.free_slot()
+        if slot is None:
+            return None
+        for i, req in enumerate(self.pending):
+            if req.arrival <= now:
+                del self.pending[i]
+                return req, slot
+        return None
+
+    def activate(self, slot: int, state: SlotState):
+        assert self.slots[slot] is None, f"slot {slot} is busy"
+        self.slots[slot] = state
+
+    def complete(self, slot: int):
+        state = self.slots[slot]
+        assert state is not None, f"slot {slot} is empty"
+        self.finished[state.request.uid] = state
+        self.slots[slot] = None
+
+    # ------------------------------------------------------------ queries
+    @property
+    def active(self) -> list[SlotState]:
+        return [s for s in self.slots if s is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(s is not None for s in self.slots)
+
+    @property
+    def next_arrival(self) -> Optional[int]:
+        if not self.pending:
+            return None
+        return min(r.arrival for r in self.pending)
