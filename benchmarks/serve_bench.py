@@ -1,9 +1,16 @@
 """Serving throughput benchmark: batched continuous-batching decode,
-float vs. plan-quantized at 2/4/8-bit (and a mixed) precision.
+float vs. plan-quantized at 2/4/8-bit (and a mixed) precision, dense vs.
+paged cache backends.
 
 Emits ``BENCH_serve.json`` (the serving-benchmark trajectory format; each
-entry is one serving variant with its measured decode throughput) and
-prints the orchestrator's ``name,us_per_call,derived`` CSV lines.
+entry is one serving variant with its measured decode throughput and its
+cache backend's peak memory) and prints the orchestrator's
+``name,us_per_call,derived`` CSV lines.
+
+The dense-vs-paged pairs run the SAME streaming mixed-prompt-length
+workload and must produce identical tokens (asserted); the paged rows
+additionally record peak cache bytes, which scale with live tokens
+instead of the dense ``max_batch * max_len`` pin.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--arch ...] \
         [--out BENCH_serve.json]
@@ -26,53 +33,80 @@ from repro.configs import registry
 from repro.models import lm
 from repro.serve import engine
 from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import Request
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
-def bench_variant(name, cfg, params, plan, prompts, sp, max_len, max_batch):
+def make_requests(cfg, n, prompt_lens, tokens, gap):
+    """Streaming arrivals with mixed prompt lengths (the paged backend's
+    target workload)."""
+    rng = np.random.default_rng(0)
+    sp = SamplingParams(max_tokens=tokens)        # greedy: deterministic
+    return [Request(uid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab,
+                        size=prompt_lens[i % len(prompt_lens)]
+                    ).astype(np.int32),
+                    sampling=sp, arrival=gap * i)
+            for i in range(n)]
+
+
+def bench_variant(name, cfg, params, plan, requests, max_len, max_batch,
+                  cache="dense", page_size=16, pages=None):
     server = engine.InferenceServer(cfg, params, plan=plan,
-                                    max_len=max_len, max_batch=max_batch)
-    server.generate(prompts, sp)          # compile + warm caches
+                                    max_len=max_len, max_batch=max_batch,
+                                    cache=cache, page_size=page_size,
+                                    pages=pages)
+    server.serve(requests)                # compile + warm caches
     t0 = time.time()
-    out = server.generate(prompts, sp)
+    out = server.serve(requests)
     wall = time.time() - t0
-    tokens = int(sum(len(r) for r in out))
+    tokens = int(sum(len(r) for r in out.values()))
+    mem = server.stats["memory"]
     row = {
         "name": name,
+        "cache": cache,
         "tokens": tokens,
         "wall_s": round(wall, 4),
         "tok_per_s": round(tokens / wall, 2),
         "decode_steps": server.stats["decode_steps"],
+        "preemptions": server.stats["preemptions"],
+        "peak_cache_bytes": mem["peak_cache_bytes"]
+        if cache == "paged" else mem["cache_bytes"],
         "plan": None,
     }
+    if cache == "paged":
+        row["page_size"] = mem["page_size"]
+        row["n_pages"] = mem["n_pages"]
+        row["peak_pages_in_use"] = mem["peak_pages_in_use"]
+        row["dense_equivalent_bytes"] = mem["dense_equivalent_bytes"]
     if plan is not None:
         row["plan"] = {
             "groups": len(plan.channel_bits),
             "prune_fraction": round(plan.prune_fraction(), 4),
             "meta_bits": plan.meta.get("bits"),
         }
-    return row
+    return row, out
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b-smoke")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--arrival-gap", type=int, default=2)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch)
     params = lm.init_params(cfg, jax.random.key(0))
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab,
-                           size=(args.requests, args.prompt_len)
-                           ).astype(np.int32)
-    sp = SamplingParams(max_tokens=args.tokens)   # greedy: deterministic
+    prompt_lens = (6, 14, 9, 21)
+    requests = make_requests(cfg, args.requests, prompt_lens, args.tokens,
+                             args.arrival_gap)
 
     variants = [("float", None)]
     for bits in (8, 4, 2):
@@ -83,11 +117,27 @@ def main(argv=None):
 
     results = []
     for name, plan in variants:
-        row = bench_variant(name, cfg, params, plan, prompts, sp,
-                            args.max_len, args.max_batch)
+        row, out_dense = bench_variant(
+            name, cfg, params, plan, requests, args.max_len,
+            args.max_batch)
         results.append(row)
         print(f"serve/{name},{row['wall_s'] * 1e6:.0f},"
               f"tok_per_s={row['tok_per_s']}")
+        # paged counterpart for the trajectory headliners only (float +
+        # mixed plan): same workload, identical tokens, measured memory
+        if name in ("float", "quant-mixed"):
+            prow, out_paged = bench_variant(
+                f"{name}-paged", cfg, params, plan, requests,
+                args.max_len, args.max_batch, cache="paged",
+                page_size=args.page_size)
+            for uid in out_dense:
+                np.testing.assert_array_equal(out_dense[uid],
+                                              out_paged[uid])
+            results.append(prow)
+            print(f"serve/{prow['name']},{prow['wall_s'] * 1e6:.0f},"
+                  f"tok_per_s={prow['tok_per_s']},"
+                  f"peak_cache_bytes={prow['peak_cache_bytes']},"
+                  f"dense_bytes={prow['dense_equivalent_bytes']}")
 
     report = {
         "benchmark": "serve",
@@ -95,10 +145,12 @@ def main(argv=None):
         "backend": jax.default_backend(),
         "arch": cfg.name,
         "config": {"requests": args.requests,
-                   "prompt_len": args.prompt_len,
+                   "prompt_lens": list(prompt_lens),
                    "tokens": args.tokens,
                    "max_batch": args.max_batch,
-                   "max_len": args.max_len},
+                   "max_len": args.max_len,
+                   "page_size": args.page_size,
+                   "arrival_gap": args.arrival_gap},
         "results": results,
     }
     with open(args.out, "w") as f:

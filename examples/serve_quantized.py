@@ -4,7 +4,10 @@ The full loop the paper implies but never ships: a CompressionPlan (the
 artifact ``api.Compressor`` produces) is bound into an LM and served --
 continuous batching, fused prefill, per-request sampling -- with every
 planned projection running bit-packed through the quant_matmul kernel
-(int8 MXU on TPU; oracle on CPU).
+(int8 MXU on TPU; oracle on CPU), and the KV cache **paged**: a fixed
+page pool + per-request block tables (``cache="paged"``), so the
+runtime cache memory scales with live tokens the same way the packed
+weights scale with the searched bit-widths.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -48,15 +51,17 @@ def main():
           f"(fp32 baseline {float_bytes}; "
           f"{float_bytes / packed_bytes:.1f}x smaller)")
 
-    # 3) serve through the quantized path: requests arriving over time,
-    # admitted into free decode slots (continuous batching), sampled at
-    # temperature 0.7
+    # 3) serve through the quantized path WITH a paged KV cache: requests
+    # arriving over time, admitted into free decode slots only when the
+    # page pool can hold their prompt + a reservation (the memory-aware
+    # admission contract), sampled on-device at temperature 0.7
     server = engine.InferenceServer(cfg, params, plan=loaded,
-                                    max_len=64, max_batch=2)
+                                    max_len=64, max_batch=2,
+                                    cache="paged", page_size=8, pages=12)
     rng = np.random.default_rng(0)
     sp = SamplingParams(temperature=0.7, top_k=40, max_tokens=10, seed=1)
     reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab, size=6
+                    prompt=rng.integers(0, cfg.vocab, size=4 + 3 * i
                                         ).astype(np.int32),
                     sampling=sp, arrival=2 * i)
             for i in range(4)]
@@ -64,12 +69,22 @@ def main():
     out = server.serve(reqs)
     dt = time.time() - t0
     total = sum(len(v) for v in out.values())
-    print(f"\nquantized continuous-batching decode: {len(reqs)} requests, "
-          f"{total} tokens in {dt:.2f}s "
-          f"({server.stats['decode_steps']} decode steps, 2 slots)")
+    print(f"\nquantized paged continuous-batching decode: {len(reqs)} "
+          f"requests, {total} tokens in {dt:.2f}s "
+          f"({server.stats['decode_steps']} decode steps, 2 slots, "
+          f"{server.stats['preemptions']} preemptions)")
     for i in range(len(reqs)):
         print(f"  req{i} (arrived step {reqs[i].arrival}): "
               f"{[int(t) for t in out[i]]}")
+
+    # 4) the backend's own accounting: pages in flight peaked well below
+    # the dense max_batch*max_len pin, and everything was freed on retire
+    mem = server.stats["memory"]
+    print(f"\nmemory_report: {mem}")
+    print(f"peak cache bytes {mem['peak_cache_bytes']} "
+          f"(dense equivalent {mem['dense_equivalent_bytes']}; "
+          f"{mem['dense_equivalent_bytes'] / mem['peak_cache_bytes']:.1f}x"
+          f" smaller), {mem['pages_in_use']} pages still held")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,13 @@ resumes from the newest readable checkpoint and -- because every phase
 derives its per-step randomness by folding the step index into a seed-keyed
 base -- replays the identical stream, so an interrupted and a resumed run
 produce the same plan.
+
+In-phase checkpoints are **incremental**: each phase start writes one
+pinned full snapshot of the carry (folded net / final net / plan), and
+periodic saves then store only the train state plus the carry leaves that
+actually changed since that snapshot (usually none -- the carry moves at
+phase boundaries).  Resume restores base + delta, bit-exact; at LM-track
+scale this stops every periodic save from rewriting the full model carry.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import numpy as np
 
 from repro.api import phases as phases_mod
 from repro.api.plan import CompressionPlan
+from repro.checkpoint import checkpoint as checkpoint_mod
 from repro.models import cnn
 
 _PHASE_STRIDE = 1_000_000    # checkpoint step tag = phase_index*stride+step
@@ -151,6 +159,8 @@ class Compressor:
         Unreadable arrays or a template mismatch (e.g. the phase list was
         edited) fall back to the next-older checkpoint instead of failing
         the run, matching restore_latest()'s skip-corrupt behavior.
+        Incremental in-phase checkpoints restore the carry from their
+        pinned phase-start base snapshot plus the saved delta leaves.
         """
         for tag in reversed(manager.all_steps()):
             try:
@@ -159,9 +169,8 @@ class Compressor:
                 step = int(meta.get("phase_step", 0))
                 if i >= len(phases):
                     continue
-                carry_tmpl = self._carry_template(meta)
-                restored, _ = manager.restore(tag, {"carry": carry_tmpl})
-                self._apply_carry(state, restored["carry"], meta)
+                carry = self._restore_carry(manager, tag, meta)
+                self._apply_carry(state, carry, meta)
                 if meta.get("boundary"):
                     return (i, 0, None)
                 train_tmpl = phases[i].init_train_state(state)
@@ -171,6 +180,28 @@ class Compressor:
                 print(f"[compressor] cannot resume from checkpoint {tag}: "
                       f"{e}")
         return None
+
+    def _restore_carry(self, manager, tag, meta) -> dict:
+        base_tag = meta.get("carry_base_tag")
+        if base_tag is None:       # boundary / legacy full-carry save
+            restored, _ = manager.restore(
+                tag, {"carry": self._carry_template(meta)})
+            return restored["carry"]
+        base_meta = manager.peek_meta(base_tag)
+        restored, _ = manager.restore(
+            base_tag, {"carry": self._carry_template(base_meta)})
+        carry = dict(restored["carry"])
+        delta_keys = meta.get("carry_delta_keys") or []
+        if delta_keys:
+            full_tmpl = self._carry_template(meta)
+            restored, _ = manager.restore(
+                tag, {"carry_delta": {k: full_tmpl[k]
+                                      for k in delta_keys}})
+            carry.update(restored["carry_delta"])
+        # keys the phase dropped since the base snapshot
+        carry = {k: v for k, v in carry.items() if meta.get(f"has_{k}")}
+        manager.pin(base_tag)      # a fresh manager must not GC the base
+        return carry
 
     def _folded_template(self):
         params = cnn.init_params(self.graph, jax.random.key(self.seed))
@@ -209,7 +240,10 @@ class Compressor:
 
 
 class _CheckpointSaver(phases_mod.Hook):
-    """Internal hook: periodic in-phase saves + phase-boundary snapshots."""
+    """Internal hook: one pinned full carry snapshot at phase start, then
+    periodic in-phase saves of the train state + only the carry leaves
+    that changed vs. that snapshot (delta; empty in the common case), and
+    a full carry snapshot at the phase boundary."""
 
     def __init__(self, manager, every: int, phase_index: int,
                  is_last: bool):
@@ -217,6 +251,12 @@ class _CheckpointSaver(phases_mod.Hook):
         self.every = every
         self.phase_index = phase_index
         self.is_last = is_last
+        self._base_flat: dict[str, dict] = {}
+        # strong refs to the carry objects captured in the base: phases
+        # REPLACE carry entries rather than mutating them, so object
+        # identity proves a key unchanged without flattening it (the refs
+        # keep `is` sound -- CPython reuses addresses of dead objects)
+        self._base_objs: dict[str, object] = {}
 
     def _carry(self, state) -> dict:
         carry = {}
@@ -244,15 +284,82 @@ class _CheckpointSaver(phases_mod.Hook):
                         if isinstance(v, (int, float))},
         }
 
+    @property
+    def _base_tag(self) -> int:
+        return self.phase_index * _PHASE_STRIDE
+
+    def on_phase_start(self, phase, state):
+        if self.every <= 0:
+            return
+        carry = self._carry(state)
+        self._base_objs = dict(carry)
+        existing = self._load_base_flat()
+        if existing is not None:
+            # a resumed run re-enters the phase: the pinned base snapshot
+            # on disk is what older delta checkpoints reference -- reuse
+            # it instead of rewriting the full carry (and deltas keep
+            # comparing against the disk content, not the resumed carry)
+            self._base_flat = existing
+            self._base_objs = {}
+            self.manager.pin(self._base_tag)
+            return
+        self._base_flat = {k: checkpoint_mod._flatten(v)
+                           for k, v in carry.items()}
+        self.manager.save(
+            self._base_tag, {"carry": carry}, blocking=False,
+            metadata=self._meta(state, self.phase_index, 0, boundary=True),
+            pin=True)
+
+    def _load_base_flat(self):
+        """The base snapshot's carry as {key: {leaf_path: array}}, read
+        straight from disk (None if absent/unreadable)."""
+        self.manager.wait()            # join any in-flight boundary write
+        try:
+            with np.load(self.manager._fname(self._base_tag),
+                         allow_pickle=False) as z:
+                out: dict[str, dict] = {}
+                for key in z.files:
+                    if not key.startswith("carry/"):
+                        continue
+                    top, _, leaf = key[len("carry/"):].partition("/")
+                    out.setdefault(top, {})[leaf] = z[key]
+                return out or None
+        except Exception:
+            return None
+
+    def _delta_keys(self, carry: dict) -> list[str]:
+        changed = []
+        for k, v in carry.items():
+            if self._base_objs.get(k) is v:
+                continue               # same object the base captured
+            base = self._base_flat.get(k)
+            if base is None:
+                changed.append(k)
+                continue
+            flat = checkpoint_mod._flatten(v)
+            if set(flat) != set(base) or any(
+                    not np.array_equal(flat[p], base[p]) for p in flat):
+                changed.append(k)
+            else:
+                self._base_objs[k] = v   # equal content: short-circuit
+                #                          the compare on later saves
+        return changed
+
     def on_step(self, phase, state, step, metrics, train_state):
         if self.every <= 0 or (step + 1) % self.every:
             return
+        carry = self._carry(state)
+        delta_keys = self._delta_keys(carry)
+        meta = self._meta(state, self.phase_index, step + 1,
+                          boundary=False)
+        meta["carry_base_tag"] = self._base_tag
+        meta["carry_delta_keys"] = delta_keys
         tag = self.phase_index * _PHASE_STRIDE + step + 1
         self.manager.save(
-            tag, {"carry": self._carry(state), "train": train_state},
-            blocking=False,
-            metadata=self._meta(state, self.phase_index, step + 1,
-                                boundary=False))
+            tag,
+            {"train": train_state,
+             "carry_delta": {k: carry[k] for k in delta_keys}},
+            blocking=False, metadata=meta)
 
     def on_phase_end(self, phase, state):
         if self.is_last or self.every <= 0:
@@ -261,4 +368,4 @@ class _CheckpointSaver(phases_mod.Hook):
         self.manager.save(
             tag, {"carry": self._carry(state)}, blocking=False,
             metadata=self._meta(state, self.phase_index + 1, 0,
-                                boundary=True))
+                                boundary=True), pin=True)

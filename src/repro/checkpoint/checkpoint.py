@@ -69,12 +69,27 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
+        self._pins: set[int] = set()
+
+    # -------------------------------------------------------------- pins
+    def pin(self, step: int):
+        """Protect a step from retention GC.  Incremental checkpointing
+        pins base snapshots that later delta saves reference; pins live in
+        this manager instance, so a resumed run must re-pin the base it
+        restored from (the Compressor does)."""
+        self._pins.add(int(step))
+
+    def unpin(self, step: int):
+        self._pins.discard(int(step))
 
     # ------------------------------------------------------------- save
     def save(self, step: int, tree: Any, blocking: bool = True,
-             metadata: Optional[dict] = None):
+             metadata: Optional[dict] = None, pin: bool = False):
         """Atomic save. With blocking=False the write happens on a
-        background thread (joins any previous in-flight write first)."""
+        background thread (joins any previous in-flight write first).
+        ``pin=True`` additionally protects the step from retention GC."""
+        if pin:
+            self.pin(step)
         host_tree = jax.tree.map(
             lambda x: np.asarray(jax.device_get(x)), tree)
         if blocking:
@@ -110,7 +125,7 @@ class CheckpointManager:
         return os.path.join(self.dir, f"step_{step:012d}.proc{self.proc}.npz")
 
     def _gc(self):
-        steps = sorted(self.all_steps())
+        steps = [s for s in sorted(self.all_steps()) if s not in self._pins]
         for s in steps[: -self.keep]:
             try:
                 os.unlink(self._fname(s))

@@ -9,6 +9,12 @@ the production mesh in the dry-run).
     # plan), sampled at temperature 0.8, requests arriving over time:
     PYTHONPATH=src python -m repro.launch.serve --plan demo \
         --temperature 0.8 --top-k 40 --stream --arrival-gap 3
+
+    # paged KV cache (vLLM-style page pool + block tables): cache memory
+    # scales with live tokens; admission is memory-aware, the pool
+    # preempts to the queue on exhaustion:
+    PYTHONPATH=src python -m repro.launch.serve --plan demo \
+        --cache paged --page-size 8 --pages 24 --stream
 """
 from __future__ import annotations
 
@@ -53,6 +59,18 @@ def main():
                          "queue over time instead of all at step 0")
     ap.add_argument("--arrival-gap", type=int, default=2,
                     help="decode steps between arrivals with --stream")
+    ap.add_argument("--cache", default="dense",
+                    choices=["dense", "paged"],
+                    help="cache backend: dense slot buffers or a paged "
+                         "pool with block tables + memory-aware admission")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per page (must divide --max-len)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size (default: dense-equivalent "
+                         "max_batch*max_len/page_size)")
+    ap.add_argument("--host-sampling", action="store_true",
+                    help="sample on the host per token instead of the "
+                         "on-device batched gumbel top-k path")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
@@ -63,7 +81,11 @@ def main():
         print(f"[serve] quantized decode: {plan.summary()}")
     server = engine.InferenceServer(cfg, params, plan=plan,
                                     max_len=args.max_len,
-                                    max_batch=args.max_batch)
+                                    max_batch=args.max_batch,
+                                    cache=args.cache,
+                                    page_size=args.page_size,
+                                    pages=args.pages,
+                                    sample_on_device=not args.host_sampling)
 
     rng = np.random.default_rng(0)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
@@ -83,8 +105,18 @@ def main():
     mode = "stream" if args.stream else "batch"
     quant = "quantized" if plan is not None else "float"
     print(f"[serve] {args.requests} requests x {args.tokens} tokens "
-          f"({mode}, {quant}) in {dt:.2f}s ({total/dt:.1f} tok/s, "
-          f"{server.stats['decode_steps']} decode steps)")
+          f"({mode}, {quant}, {args.cache} cache) in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s, {server.stats['decode_steps']} decode "
+          f"steps, {server.stats['preemptions']} preemptions)")
+    mem = server.stats["memory"]
+    if mem["backend"] == "paged":
+        print(f"[serve] memory: peak {mem['peak_cache_bytes']} B "
+              f"({mem['peak_pages_in_use']}/{mem['n_pages']} pages of "
+              f"{mem['bytes_per_page']} B) vs dense-equivalent "
+              f"{mem['dense_equivalent_bytes']} B")
+    else:
+        print(f"[serve] memory: dense cache {mem['cache_bytes']} B "
+              f"(pinned for the full serve)")
     for i in range(min(args.requests, 4)):
         print(f"  req{i}: prompt={[int(t) for t in reqs[i].prompt[:6]]}... "
               f"completion={[int(t) for t in out[i][:8]]}")

@@ -81,6 +81,21 @@ def make_prefill_step(cfg: ArchConfig):
     return step_fn
 
 
+def make_bucketed_prefill_step(cfg: ArchConfig):
+    """Prefill for page-bucketed prompts: ``tokens`` is padded up to a
+    page boundary, ``last_pos`` is the () int32 index of the last REAL
+    prompt token.  Compiled once per page-count bucket instead of once per
+    distinct prompt length (last_pos is traced, not baked in).  Only valid
+    for attention-only stacks -- an SSM mixer's recurrent state would be
+    polluted by the trailing padding; pure/hybrid-SSM archs prefill at
+    exact length instead."""
+    def step_fn(params, batch, last_pos):
+        logits, caches = lm.forward(cfg, params, batch, mode="prefill",
+                                    logits_mode="last", last_pos=last_pos)
+        return logits, caches
+    return step_fn
+
+
 def make_decode_step(cfg: ArchConfig):
     def step_fn(params, token_batch, caches, pos):
         return lm.decode_step(cfg, params, token_batch, caches, pos)

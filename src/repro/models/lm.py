@@ -447,7 +447,7 @@ def _encode(cfg, params, batch, getw=None):
 
 def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
             caches=None, pos=None, ctx: Optional[mps.SearchCtx] = None,
-            logits_mode: str = "full"):
+            logits_mode: str = "full", last_pos=None):
     """Returns (logits | hidden, new_caches).
 
     batch keys: tokens (B, S) int32 | embeddings (B, S, D) for stub
@@ -456,6 +456,10 @@ def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
     logits_mode: "full" | "last" (final position only -- serving prefill
     never materializes (B, S, V)) | "hidden" (return the final hidden
     states; the caller computes logits, e.g. the chunked loss below).
+    last_pos: with logits_mode="last", an () int32 position to read
+    instead of S-1 -- page-bucketed prefill pads the prompt to a page
+    boundary and reads the logits of the last REAL token (causal attention
+    makes every position <= last_pos independent of the padding).
     """
     getw = _make_effective_w(ctx, cfg.mps_precisions)
     enc_out = None
@@ -480,7 +484,11 @@ def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
     if logits_mode == "hidden":
         return x, new_caches
     if logits_mode == "last":
-        x = x[:, -1:, :]
+        if last_pos is None:
+            x = x[:, -1:, :]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(last_pos), 1,
+                                             axis=1)
     logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"].astype(
         jnp.bfloat16))
     logits = sharding.constrain(logits, "batch", None, "vocab")
@@ -641,6 +649,75 @@ def cache_logical_axes(cfg: ArchConfig):
                 "v": ("layers", "batch", None, None, None)}
         caches[f"l{i}"] = c
     return caches
+
+
+def init_paged_caches(cfg: ArchConfig, batch: int, page_size: int,
+                      n_pages: int, abstract: bool = False):
+    """Paged counterpart of :func:`init_caches` (no cross-attention:
+    serving is decoder-only).
+
+    KV tensors become fixed page pools ``(nsb, n_pages + 1, page_size,
+    hkv, hd)`` indexed by physical page id -- page 0 is the reserved null
+    page that inactive block-table entries point at (written garbage is
+    always masked).  SSM state is O(1) per request, so it keeps the dense
+    per-slot layout ``(nsb, batch, ...)``.  The per-request block tables
+    are NOT part of this tree; the cache backend composes them in at
+    gather time (they are host-side bookkeeping that changes on admission
+    / page allocation, not per decode step).
+    """
+    if cfg.is_encdec:
+        raise NotImplementedError("paged caches are decoder-only")
+    nsb = n_superblocks(cfg)
+    hkv, hd = cfg.hkv_eff, cfg.head_dim
+
+    def mk(shape, dtype=jnp.bfloat16):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    caches = {}
+    for i, spec in enumerate(block_pattern(cfg)):
+        c = {}
+        if spec.mixer == "mamba":
+            c["mamba"] = {
+                "ssm": mk((nsb, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32),
+                "conv": {
+                    "x": mk((nsb, batch, cfg.ssm_conv - 1, cfg.d_inner)),
+                    "b": mk((nsb, batch, cfg.ssm_conv - 1, cfg.ssm_state)),
+                    "c": mk((nsb, batch, cfg.ssm_conv - 1, cfg.ssm_state)),
+                }}
+        else:
+            c["kv"] = {"k": mk((nsb, n_pages + 1, page_size, hkv, hd)),
+                       "v": mk((nsb, n_pages + 1, page_size, hkv, hd))}
+        caches[f"l{i}"] = c
+    return caches
+
+
+def _tree_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(l.size * jnp.dtype(l.dtype).itemsize for l in leaves))
+
+
+def kv_bytes_per_token(cfg: ArchConfig) -> int:
+    """Bytes of KV cache one token position pins across all attention
+    layers (0 for pure-SSM architectures)."""
+    tree = init_caches(cfg, 1, 1, abstract=True)
+    return _tree_bytes({l: {"kv": c["kv"]} for l, c in tree.items()
+                        if "kv" in c})
+
+
+def ssm_bytes_per_slot(cfg: ArchConfig) -> int:
+    """Bytes of recurrent (SSM + conv) state one decode slot pins (0 for
+    attention-only architectures)."""
+    tree = init_caches(cfg, 1, 1, abstract=True)
+    return _tree_bytes({l: {"mamba": c["mamba"]} for l, c in tree.items()
+                        if "mamba" in c})
+
+
+def dense_cache_bytes(cfg: ArchConfig, batch: int, seq_len: int) -> int:
+    """Total bytes :func:`init_caches` pins for a dense decode pool."""
+    return _tree_bytes(init_caches(cfg, batch, seq_len, abstract=True))
 
 
 def prefill(cfg: ArchConfig, params, batch):

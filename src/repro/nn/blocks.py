@@ -253,7 +253,29 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
         pos_rope = posn[None] if posn.ndim == 0 else posn[:, None]
         q = rope(q, pos_rope, cfg.rope_theta)
         kk = rope(kk, pos_rope, cfg.rope_theta)
-        if cache is not None:
+        if cache is not None and "table" in cache:
+            # paged KV (serve.cache.PagedCache): cache["k"/"v"] are page
+            # pools (n_pages, page_size, hkv, hd), cache["table"] the
+            # per-slot block tables (B, P) of physical page ids.  Scatter
+            # the token's K/V at (table[b, pos//ps], pos%ps), then gather
+            # the slot's pages into a logically-ordered (B, P*ps, hkv, hd)
+            # view -- when page_size divides max_len this view is
+            # element-for-element the dense cache row, so attention is
+            # bitwise identical to the dense backend (stale page content
+            # only ever appears at masked positions).
+            table = cache["table"]                       # (B, P)
+            page_size = cache["k"].shape[1]
+            rows = jnp.arange(b)
+            phys = table[rows, posn // page_size]        # (B,)
+            off = posn % page_size
+            ck = cache["k"].at[phys, off].set(kk[:, 0].astype(
+                cache["k"].dtype))
+            cv = cache["v"].at[phys, off].set(vv[:, 0].astype(
+                cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv, "table": table}
+            ck = ck[table].reshape(b, -1, hkv, hd)       # gathered views
+            cv = cv[table].reshape(b, -1, hkv, hd)
+        elif cache is not None:
             kk = kk.astype(cache["k"].dtype)
             vv = vv.astype(cache["v"].dtype)
             if posn.ndim == 0:
@@ -265,9 +287,10 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
                 rows = jnp.arange(b)
                 ck = cache["k"].at[rows, posn].set(kk[:, 0])
                 cv = cache["v"].at[rows, posn].set(vv[:, 0])
+            new_cache = {"k": ck, "v": cv}
         else:
             ck, cv = kk, vv
-        new_cache = {"k": ck, "v": cv}
+            new_cache = {"k": ck, "v": cv}
         out = decode_attention(q, ck, cv, posn, window=window,
                                chunked=chunked, cap=cfg.attn_softcap)
     else:

@@ -1,0 +1,411 @@
+"""Unified cache backends for the serving stack.
+
+The :class:`~repro.serve.engine.InferenceServer` no longer owns raw
+KV/SSM buffers; it drives a :class:`CacheBackend`:
+
+    alloc(uid, slot, n_prompt) -> CacheHandle     (admission)
+    insert(handle, prefill_caches)                (prompt KV/SSM -> cache)
+    append(handle)                                (one decoded token;
+                                                   may allocate a page ->
+                                                   raises PoolExhausted)
+    gather() -> caches pytree                     (view for decode_step)
+    commit(new_caches)                            (store the step's output)
+    free(handle)                                  (retirement/preemption)
+    can_admit(n_prompt) / memory_report()         (the admission contract)
+
+Two implementations:
+
+* :class:`DenseCache` -- the pre-existing behavior: one dense
+  ``(nsb, max_batch, max_len, ...)`` buffer per KV tensor, every slot pins
+  ``max_len`` positions regardless of actual length.
+* :class:`PagedCache` -- vLLM-style paging (PagedAttention, Kwon et al.
+  2023): a fixed pool of ``page_size``-token pages plus per-slot block
+  tables; pages are allocated on admission (prompt + first decode write)
+  and lazily as decode crosses page boundaries, and freed on retirement,
+  so cache memory scales with tokens actually held.  SSM state is O(1)
+  per request and lives in a parallel per-slot pool.  Physical page 0 is
+  a reserved null page: inactive slots and unused block-table entries
+  point at it, and anything written there is only ever read at masked
+  positions.
+
+The backends' contract is *token-for-token invariance*: the same request
+stream produces identical tokens on either backend (and solo vs.
+batched).  ``page_size`` must divide ``max_len`` so the paged gather view
+has exactly the dense width -- attention is then bitwise identical.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+class PoolExhausted(RuntimeError):
+    """The page pool cannot serve an allocation; the engine reacts by
+    preempting a request back to the queue."""
+
+
+@dataclasses.dataclass
+class CacheHandle:
+    """One admitted request's cache residency."""
+
+    uid: int
+    slot: int                 # decode-batch row / block-table row
+    n_tokens: int             # cache positions written so far
+    pages: list = dataclasses.field(default_factory=list)
+
+
+def _ins_slot(big, small, slot):
+    """Insert a per-request state (leading batch dim 1) into slot row."""
+    small = small.astype(big.dtype)
+    starts = (0, slot) + (0,) * (big.ndim - 2)
+    return jax.lax.dynamic_update_slice(big, small, starts)
+
+
+class CacheBackend:
+    """Shared bookkeeping; subclasses fill in the storage strategy."""
+
+    name = "abstract"
+
+    def __init__(self, cfg, max_batch: int, max_len: int):
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.caches = None
+
+    # -- admission contract -------------------------------------------------
+    def can_admit(self, n_prompt: int) -> bool:
+        raise NotImplementedError
+
+    def check_feasible(self, n_prompt: int, max_tokens: int):
+        """Raise if the request could never run to completion alone."""
+
+    def alloc(self, uid: int, slot: int, n_prompt: int) -> CacheHandle:
+        raise NotImplementedError
+
+    def free(self, handle: CacheHandle):
+        raise NotImplementedError
+
+    def append(self, handle: CacheHandle):
+        """Advance one decoded token; ensure the next write position is
+        backed by storage (may raise :class:`PoolExhausted`)."""
+        handle.n_tokens += 1
+
+    # -- data movement ------------------------------------------------------
+    def insert(self, handle: CacheHandle, prefill_caches):
+        raise NotImplementedError
+
+    def gather(self):
+        """The caches pytree ``lm.decode_step`` consumes this step."""
+        return self.caches
+
+    def commit(self, new_caches):
+        """Store the (donated-through) cache tree a decode step returned."""
+        self.caches = new_caches
+
+    # -- reporting ----------------------------------------------------------
+    def memory_report(self) -> dict:
+        raise NotImplementedError
+
+    def reset(self):
+        """Drop all residency bookkeeping (buffers may keep stale data;
+        every readable position is overwritten before it is unmasked)."""
+
+
+class DenseCache(CacheBackend):
+    """Current behavior, refactored behind the backend API: every decode
+    slot pins a dense ``max_len`` KV row for its whole lifetime."""
+
+    name = "dense"
+
+    def __init__(self, cfg, max_batch: int, max_len: int):
+        super().__init__(cfg, max_batch, max_len)
+        self.caches = lm.init_caches(cfg, max_batch, max_len)
+        self._bytes = lm.dense_cache_bytes(cfg, max_batch, max_len)
+        self._live_tokens = 0
+        self._peak_tokens = 0
+        self._handles: dict[int, CacheHandle] = {}
+
+        def ins(caches, pcaches, slot):
+            return jax.tree.map(
+                lambda big, small: _ins_slot(big, small, slot),
+                caches, pcaches)
+
+        self._insert = jax.jit(ins, donate_argnums=(0,))
+
+    def can_admit(self, n_prompt: int) -> bool:
+        return True
+
+    def alloc(self, uid, slot, n_prompt):
+        h = CacheHandle(uid=uid, slot=slot, n_tokens=n_prompt)
+        self._handles[slot] = h
+        self._live_tokens += n_prompt + 1
+        self._peak_tokens = max(self._peak_tokens, self._live_tokens)
+        return h
+
+    def append(self, handle):
+        handle.n_tokens += 1
+        self._live_tokens += 1
+        self._peak_tokens = max(self._peak_tokens, self._live_tokens)
+
+    def free(self, handle):
+        self._handles.pop(handle.slot, None)
+        self._live_tokens -= handle.n_tokens + 1
+        handle.pages = []
+
+    def insert(self, handle, prefill_caches):
+        self.caches = self._insert(self.caches, prefill_caches,
+                                   jnp.asarray(handle.slot, jnp.int32))
+
+    def memory_report(self) -> dict:
+        return {
+            "backend": self.name,
+            "max_batch": self.max_batch,
+            "max_len": self.max_len,
+            "cache_bytes": self._bytes,
+            "peak_cache_bytes": self._bytes,   # dense pins everything
+            "live_tokens": self._live_tokens,
+            "peak_live_tokens": self._peak_tokens,
+        }
+
+    def reset(self):
+        self._handles.clear()
+        self._live_tokens = 0
+        self._peak_tokens = 0
+
+
+class PagedCache(CacheBackend):
+    """Fixed-size page pool + per-request block tables.
+
+    ``n_pages`` usable pages of ``page_size`` tokens each (plus the
+    reserved null page 0).  Admission requires pages covering the prompt
+    AND the first decode write, with ``reserve_pages`` extra free as the
+    admission reservation; decode allocates lazily on page-boundary
+    crossings via :meth:`append`.
+    """
+
+    name = "paged"
+
+    def __init__(self, cfg, max_batch: int, max_len: int, *,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 reserve_pages: int = 1):
+        super().__init__(cfg, max_batch, max_len)
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if max_len % page_size:
+            raise ValueError(
+                f"page_size must divide max_len for dense-equivalent "
+                f"attention views, got page_size={page_size} "
+                f"max_len={max_len}")
+        self.page_size = int(page_size)
+        self.table_width = max_len // page_size
+        if n_pages is None:        # dense-equivalent capacity
+            n_pages = max_batch * self.table_width
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        self.n_pages = int(n_pages)
+        self.reserve_pages = max(int(reserve_pages), 0)
+
+        self.caches = lm.init_paged_caches(cfg, max_batch, self.page_size,
+                                           self.n_pages)
+        self._has_kv = any("kv" in c for c in self.caches.values())
+        self._nsb = lm.n_superblocks(cfg)
+        self._table = np.zeros((max_batch, self.table_width), np.int32)
+        self._free = collections.deque(range(1, self.n_pages + 1))
+        self._handles: dict[int, CacheHandle] = {}
+        self._peak_pages = 0
+
+        kv_tok = lm.kv_bytes_per_token(cfg)
+        self.bytes_per_page = kv_tok * self.page_size
+        self.ssm_slot_bytes = lm.ssm_bytes_per_slot(cfg)
+        self.dense_equivalent_bytes = lm.dense_cache_bytes(
+            cfg, max_batch, max_len)
+
+        def ins(caches, pcaches, slot, page_ids):
+            out = {}
+            for lname, c in caches.items():
+                nc = {}
+                if "kv" in c:
+                    nc["kv"] = {
+                        kk: self._scatter_pages(c["kv"][kk],
+                                                pcaches[lname]["kv"][kk],
+                                                page_ids)
+                        for kk in ("k", "v")}
+                if "mamba" in c:
+                    nc["mamba"] = jax.tree.map(
+                        lambda big, small: _ins_slot(big, small, slot),
+                        c["mamba"], pcaches[lname]["mamba"])
+                out[lname] = nc
+            return out
+
+        self._insert = jax.jit(ins, donate_argnums=(0,))
+
+    def _scatter_pages(self, pool, kv, page_ids):
+        """kv: (nsb, 1, S, hkv, hd) prompt K/V -> pool pages."""
+        kv = kv.astype(pool.dtype)
+        nsb, _, s, hkv, hd = kv.shape
+        npg = page_ids.shape[0]
+        pad = npg * self.page_size - s
+        if pad:
+            kv = jnp.pad(kv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kv = kv.reshape(nsb, npg, self.page_size, hkv, hd)
+        return pool.at[:, page_ids].set(kv)
+
+    # -- page arithmetic ----------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        if not self._has_kv:
+            return 0               # pure-SSM: state is per-slot, no pages
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    def padded_len(self, n_tokens: int) -> int:
+        """Prompt length padded up to a page boundary (bucketed prefill)."""
+        return max(self.pages_for(n_tokens), 1) * self.page_size
+
+    # -- admission contract -------------------------------------------------
+    def _admission_pages(self, n_prompt: int) -> int:
+        """Pages covering the prompt + the first decode write (clamped to
+        the table width, mirroring :meth:`append`'s max_len clamp)."""
+        return self.pages_for(min(n_prompt + 1, self.max_len))
+
+    def can_admit(self, n_prompt: int) -> bool:
+        need = self._admission_pages(n_prompt) + self.reserve_pages
+        return len(self._free) >= need
+
+    def check_feasible(self, n_prompt: int, max_tokens: int):
+        total = min(n_prompt + max_tokens, self.max_len)
+        need = self.pages_for(total) + self.reserve_pages
+        if need > self.n_pages:
+            raise ValueError(
+                f"request needs {need} pages (prompt {n_prompt} + "
+                f"max_tokens {max_tokens} + reserve {self.reserve_pages}) "
+                f"but the pool only has {self.n_pages}; it could never be "
+                f"admitted")
+
+    def alloc(self, uid, slot, n_prompt):
+        n = self._admission_pages(n_prompt)
+        if len(self._free) < n:
+            raise PoolExhausted(
+                f"need {n} pages for uid {uid}, {len(self._free)} free")
+        h = CacheHandle(uid=uid, slot=slot, n_tokens=n_prompt,
+                        pages=[self._free.popleft() for _ in range(n)])
+        self._table[slot] = 0
+        self._table[slot, :n] = h.pages
+        self._handles[slot] = h
+        self._note_usage()
+        return h
+
+    def append(self, handle):
+        # back the next write position BEFORE advancing the counter: a
+        # PoolExhausted raise leaves the handle untouched, so the
+        # engine's preempt-and-retry loop can safely call append again
+        nxt = handle.n_tokens + 1       # next cache write position
+        if nxt < self.max_len and self._has_kv:
+            pg = nxt // self.page_size
+            if pg >= len(handle.pages):
+                if not self._free:
+                    raise PoolExhausted(
+                        f"uid {handle.uid} needs page {pg}, pool empty")
+                phys = self._free.popleft()
+                handle.pages.append(phys)
+                self._table[handle.slot, pg] = phys
+                self._note_usage()
+        handle.n_tokens += 1
+
+    def free(self, handle):
+        self._free.extend(handle.pages)
+        handle.pages = []
+        self._table[handle.slot] = 0
+        self._handles.pop(handle.slot, None)
+
+    def _note_usage(self):
+        self._peak_pages = max(self._peak_pages, self.pages_in_use)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    # -- data movement ------------------------------------------------------
+    def insert(self, handle, prefill_caches):
+        page_ids = jnp.asarray(handle.pages, jnp.int32) if handle.pages \
+            else jnp.zeros((0,), jnp.int32)
+        self.caches = self._insert(self.caches, prefill_caches,
+                                   jnp.asarray(handle.slot, jnp.int32),
+                                   page_ids)
+
+    def gather(self):
+        # fresh device tables every step: the gathered tree is donated
+        # into the decode step, so a cached device array would die with it
+        table = jnp.asarray(np.broadcast_to(
+            self._table, (self._nsb,) + self._table.shape))
+        out = {}
+        for lname, c in self.caches.items():
+            nc = {}
+            if "kv" in c:
+                nc["kv"] = {"k": c["kv"]["k"], "v": c["kv"]["v"],
+                            "table": table}
+            if "mamba" in c:
+                nc["mamba"] = c["mamba"]
+            out[lname] = nc
+        return out
+
+    def commit(self, new_caches):
+        out = {}
+        for lname, c in new_caches.items():
+            nc = {}
+            if "kv" in c:
+                nc["kv"] = {"k": c["kv"]["k"], "v": c["kv"]["v"]}
+            if "mamba" in c:
+                nc["mamba"] = c["mamba"]
+            out[lname] = nc
+        self.caches = out
+
+    # -- reporting ----------------------------------------------------------
+    def memory_report(self) -> dict:
+        in_use = self.pages_in_use
+        slots = len(self._handles)
+        return {
+            "backend": self.name,
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "pages_in_use": in_use,
+            "pages_free": len(self._free),
+            "peak_pages_in_use": self._peak_pages,
+            "bytes_per_page": self.bytes_per_page,
+            "ssm_slot_bytes": self.ssm_slot_bytes,
+            "cache_bytes_in_use": in_use * self.bytes_per_page
+            + slots * self.ssm_slot_bytes,
+            "peak_cache_bytes": self._peak_pages * self.bytes_per_page
+            + self.max_batch * self.ssm_slot_bytes,
+            "pool_bytes": (self.n_pages + 1) * self.bytes_per_page
+            + self.max_batch * self.ssm_slot_bytes,
+            "dense_equivalent_bytes": self.dense_equivalent_bytes,
+        }
+
+    def reset(self):
+        for h in list(self._handles.values()):
+            self.free(h)
+        self._table[:] = 0
+        self._free = collections.deque(range(1, self.n_pages + 1))
+        self._peak_pages = 0
+
+
+def make_backend(kind: str, cfg, max_batch: int, max_len: int,
+                 **kwargs) -> CacheBackend:
+    """``kind``: "dense" | "paged" (kwargs: page_size, n_pages,
+    reserve_pages)."""
+    if kind == "dense":
+        if kwargs:
+            raise ValueError(f"DenseCache takes no options, got "
+                             f"{sorted(kwargs)}")
+        return DenseCache(cfg, max_batch, max_len)
+    if kind == "paged":
+        return PagedCache(cfg, max_batch, max_len, **kwargs)
+    raise ValueError(f"unknown cache backend {kind!r} "
+                     f"(expected 'dense' or 'paged')")

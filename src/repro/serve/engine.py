@@ -3,9 +3,15 @@
 Layers:
   * :class:`InferenceServer` -- the serving API.  Takes ``(cfg, params,
     plan)``; owns a continuous-batching scheduler (new requests are
-    admitted into decode slots as others finish), fused prefill (one
-    full-sequence forward via ``launch.steps.make_prefill_step`` instead of
-    a per-token loop), per-request :class:`SamplingParams`, and -- when a
+    admitted into decode slots as others finish), a pluggable
+    :class:`~repro.serve.cache.CacheBackend` (``cache="dense"`` keeps the
+    historical dense slot buffers, ``cache="paged"`` virtualizes them
+    behind a page pool + block tables so cache memory scales with live
+    tokens), fused prefill (one full-sequence forward via
+    ``launch.steps``, page-bucketed under paging), per-request
+    :class:`SamplingParams` drawn **on device** inside the jitted decode
+    step (Gumbel top-k, per-request fold_in'd keys; host fallback via
+    ``sample_on_device=False``), and -- when a
     :class:`~repro.api.plan.CompressionPlan` is given -- end-to-end
     quantized decode: every planned projection is bound to a
     :class:`~repro.nn.quantized.PackedLinear` and served through
@@ -15,6 +21,11 @@ Layers:
     shared with the in-forward path via ``repro.nn.quantized``.
   * :class:`ServeEngine` -- thin backward-compatible shim over
     :class:`InferenceServer` (greedy, all-at-once batch).
+
+The cache-backend contract is *token-for-token invariance*: dense and
+paged backends, solo and batched and streaming, with or without a plan,
+all emit identical token streams -- the serving tests assert exactly
+that.
 """
 from __future__ import annotations
 
@@ -27,7 +38,9 @@ import numpy as np
 from repro.launch import steps
 from repro.models import lm
 from repro.nn import quantized as nnq
-from repro.serve.sampling import SamplingParams, make_rng, sample_token
+from repro.serve import cache as cache_mod
+from repro.serve.sampling import (SamplingParams, make_rng, sample_token,
+                                  sample_tokens_device)
 from repro.serve.scheduler import Request, Scheduler, SlotState
 
 
@@ -120,13 +133,19 @@ class InferenceServer:
 
     ``plan=None`` serves float weights; a :class:`CompressionPlan` switches
     the whole decode path to quantized execution (see :func:`apply_plan`).
-    Decoder-only token-frontend architectures only (enc-dec and
-    vision/audio frontends need prompt-side encoders the request schema
-    doesn't carry yet).
+    ``cache="paged"`` swaps the dense per-slot KV buffers for a
+    :class:`~repro.serve.cache.PagedCache` (page pool + block tables,
+    memory-aware admission, preemption-to-queue on pool exhaustion) --
+    token streams are identical on both backends.  Decoder-only
+    token-frontend architectures only (enc-dec and vision/audio frontends
+    need prompt-side encoders the request schema doesn't carry yet).
     """
 
     def __init__(self, cfg, params, plan=None, *, max_len: int = 512,
-                 max_batch: int = 8, strict_plan: bool = True):
+                 max_batch: int = 8, strict_plan: bool = True,
+                 cache: str = "dense", page_size: int = 16,
+                 pages: int | None = None, reserve_pages: int = 1,
+                 sample_on_device: bool = True):
         if cfg.is_encdec or cfg.frontend != "none":
             raise NotImplementedError(
                 f"InferenceServer serves decoder-only token-frontend "
@@ -138,67 +157,135 @@ class InferenceServer:
         self.max_batch = int(max_batch)
         self.params = params if plan is None else apply_plan(
             cfg, params, plan, strict=strict_plan)
+        self.sample_on_device = bool(sample_on_device)
         self.stats: dict = {}
 
-        prefill_step = steps.make_prefill_step(cfg)
+        kwargs = {} if cache == "dense" else {
+            "page_size": page_size, "n_pages": pages,
+            "reserve_pages": reserve_pages}
+        self.backend = cache_mod.make_backend(cache, cfg, self.max_batch,
+                                              self.max_len, **kwargs)
+        # page-bucketed prefill needs causal position-locality; an SSM
+        # mixer's recurrent state would absorb the padding, so SSM/hybrid
+        # archs prefill at exact length (compiled per prompt length) and
+        # only attention-only stacks get the per-page-count buckets
+        self._has_ssm = any(spec.mixer == "mamba"
+                            for spec in lm.block_pattern(cfg))
+        self._bucketed = (self.backend.name == "paged"
+                          and not self._has_ssm)
 
-        def prefill_insert(params, tokens, caches, slot):
-            """Fused prefill of one request + KV/SSM insertion into its
-            decode slot (compiled once per distinct prompt length)."""
-            logits, pcaches = prefill_step(params, {"tokens": tokens})
-
-            def ins(big, small):
-                small = small.astype(big.dtype)
-                starts = (0, slot) + (0,) * (big.ndim - 2)
-                return jax.lax.dynamic_update_slice(big, small, starts)
-
-            return logits, jax.tree.map(ins, caches, pcaches)
-
+        self._prefill = jax.jit(steps.make_prefill_step(cfg))
+        self._prefill_bucketed = jax.jit(
+            steps.make_bucketed_prefill_step(cfg))
         # donate the cache tree: decode updates it in place instead of
-        # copying the full (nsb, max_batch, max_len, ...) buffers per
-        # token (no-op on CPU, where XLA ignores donation)
-        self._prefill_insert = jax.jit(prefill_insert, donate_argnums=(2,))
+        # copying the full pool buffers per token (no-op on CPU, where
+        # XLA ignores donation)
         self._decode = jax.jit(
             lambda p, t, c, pos: lm.decode_step(cfg, p, t, c, pos),
             donate_argnums=(2,))
+
+        vocab = cfg.vocab
+
+        def decode_sample(params, tokens, caches, pos, temps, topks,
+                          seeds, uids, tidx):
+            """One decode step + on-device batched sampling: only the
+            (B,) sampled ids cross back to the host."""
+            logits, caches = lm.decode_step(cfg, params, tokens, caches,
+                                            pos)
+            next_tok = sample_tokens_device(
+                logits[:, -1, :vocab], temps, topks, seeds, uids, tidx)
+            return next_tok, caches
+
+        self._decode_sample = jax.jit(decode_sample, donate_argnums=(2,))
+
+        def decode_greedy(params, tokens, caches, pos):
+            """All-greedy fast path: plain argmax, no sort/Gumbel work."""
+            logits, caches = lm.decode_step(cfg, params, tokens, caches,
+                                            pos)
+            next_tok = jnp.argmax(
+                logits[:, -1, :vocab].astype(jnp.float32), axis=-1)
+            return next_tok.astype(jnp.int32), caches
+
+        self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(2,))
+        self._sample = jax.jit(
+            lambda lg, temps, topks, seeds, uids, tidx:
+            sample_tokens_device(lg[:, :vocab], temps, topks, seeds,
+                                 uids, tidx))
+
+    # ------------------------------------------------------- sampling glue
+    def _sample_first(self, logits_last, st_req, uid, tidx, rng):
+        """Sample from prefill logits (token index ``tidx`` of the
+        request's stream): device path or host fallback."""
+        if self.sample_on_device:
+            sp = st_req.sampling
+            tok = self._sample(
+                logits_last.astype(jnp.float32),
+                jnp.asarray([sp.temperature], jnp.float32),
+                jnp.asarray([sp.top_k], jnp.int32),
+                jnp.asarray([sp.seed], jnp.int32),
+                jnp.asarray([uid], jnp.int32),
+                jnp.asarray([tidx], jnp.int32))
+            return int(np.asarray(tok)[0])
+        row = np.asarray(logits_last.astype(jnp.float32))[0]
+        return sample_token(row[: self.cfg.vocab], st_req.sampling, rng)
 
     # ------------------------------------------------------------ serving
     def serve(self, requests) -> dict:
         """Run every request to completion with continuous batching.
 
         Requests whose ``arrival > 0`` join the queue at that decode step
-        (streaming-arrivals mode); more requests than ``max_batch`` simply
-        queue for free slots.  Returns ``{uid: np.ndarray(tokens)}``.
+        (streaming-arrivals mode); more requests than ``max_batch`` (or
+        than the page pool can hold at once -- the backend's admission
+        contract) simply queue for capacity.  Returns
+        ``{uid: np.ndarray(tokens)}``.
         """
         sched = Scheduler(self.max_batch, self.max_len)
+        backend = self.backend
+        backend.reset()
         for r in requests:
+            backend.check_feasible(np.asarray(r.prompt).size,
+                                   r.sampling.max_tokens)
             sched.submit(r)
-        caches = lm.init_caches(self.cfg, self.max_batch, self.max_len)
-        vocab = self.cfg.vocab
         now = 0
         n_steps = n_admitted = 0
 
         while sched.has_work:
-            # admit every arrived request that fits a free slot
+            # admit every arrived request the backend has memory for
             while True:
-                adm = sched.pop_admissible(now)
+                adm = sched.pop_admissible(
+                    now, can_admit=lambda e: backend.can_admit(
+                        e.tokens().size))
                 if adm is None:
                     break
-                req, slot = adm
-                tokens = jnp.asarray(np.asarray(req.prompt, np.int32))[None]
-                logits, caches = self._prefill_insert(
-                    self.params, tokens, caches,
-                    jnp.asarray(slot, jnp.int32))
-                row = np.asarray(logits.astype(jnp.float32))[0, -1, :vocab]
-                rng = make_rng(req.sampling, req.uid)
-                tok = sample_token(row, req.sampling, rng)
-                st = SlotState(request=req, slot=slot,
-                               pos=int(np.asarray(req.prompt).size),
-                               remaining=req.sampling.max_tokens - 1,
-                               last_token=tok, out=[tok], rng=rng)
+                entry, slot = adm
+                req = entry.request
+                tokens_np = entry.tokens()
+                handle = backend.alloc(req.uid, slot, tokens_np.size)
+                logits = self._run_prefill(backend, handle, tokens_np)
                 n_admitted += 1
+                if entry.resume is None:
+                    rng = make_rng(req.sampling, req.uid)
+                    tok = self._sample_first(logits, req, req.uid, 0, rng)
+                    st = SlotState(request=req, slot=slot,
+                                   pos=int(tokens_np.size),
+                                   remaining=req.sampling.max_tokens - 1,
+                                   last_token=tok, out=[tok], rng=rng,
+                                   order=n_admitted, handle=handle)
+                else:       # preempted request: continue its exact stream
+                    st = entry.resume
+                    tok = self._sample_first(logits, req, req.uid,
+                                             len(st.out), st.rng)
+                    st.slot = slot
+                    st.pos = int(tokens_np.size)
+                    st.out.append(tok)
+                    st.last_token = tok
+                    st.remaining -= 1
+                    st.order = n_admitted
+                    st.handle = handle
                 sched.activate(slot, st)
-                if st.remaining <= 0:
+                if st.remaining <= 0 or st.pos >= self.max_len:
+                    st.truncated = st.remaining > 0
+                    backend.free(handle)
                     sched.complete(slot)
 
             active = sched.active
@@ -210,35 +297,120 @@ class InferenceServer:
                 continue
 
             # one batched decode step over the active slots
-            tokens = np.zeros((self.max_batch, 1), np.int32)
-            pos = np.zeros((self.max_batch,), np.int32)
-            for st in active:
-                tokens[st.slot, 0] = st.last_token
-                pos[st.slot] = st.pos
-            logits, caches = self._decode(
-                self.params, {"tokens": jnp.asarray(tokens)}, caches,
-                jnp.asarray(pos))
-            rows = np.asarray(logits.astype(jnp.float32))[:, -1, :vocab]
+            next_toks = self._decode_active(active)
             n_steps += 1
+            survivors = []
             for st in active:
                 st.pos += 1
-                tok = sample_token(rows[st.slot], st.request.sampling,
-                                   st.rng)
+                tok = next_toks[st.slot]
                 st.out.append(tok)
                 st.last_token = tok
                 st.remaining -= 1
                 if st.remaining <= 0:
+                    backend.free(st.handle)
                     sched.complete(st.slot)
                 elif st.pos >= self.max_len:
                     st.truncated = True
+                    backend.free(st.handle)
                     sched.complete(st.slot)
+                else:
+                    survivors.append(st)
+            # page-backing AFTER every slot recorded its token: a
+            # preemption victim then always requeues with its full
+            # sampled stream (resume re-derives nothing)
+            for st in survivors:
+                if sched.slots[st.slot] is st:   # not already preempted
+                    self._append_or_preempt(sched, backend, st)
             now += 1
 
         self.stats = {"decode_steps": n_steps, "admitted": n_admitted,
+                      "preemptions": sched.preemptions,
                       "generated": sum(len(s.out)
-                                       for s in sched.finished.values())}
+                                       for s in sched.finished.values()),
+                      "memory": backend.memory_report()}
         return {uid: np.asarray(s.out, np.int32)
                 for uid, s in sched.finished.items()}
+
+    def _run_prefill(self, backend, handle, tokens_np):
+        """Fused full-sequence prefill; insert KV/SSM into the backend.
+        Returns the (1, V_pad) logits of the last real prompt token."""
+        s = int(tokens_np.size)
+        if self._bucketed:
+            spad = backend.padded_len(s)
+            padded = np.zeros(spad, np.int32)
+            padded[:s] = tokens_np
+            logits, pcaches = self._prefill_bucketed(
+                self.params, {"tokens": jnp.asarray(padded)[None]},
+                jnp.asarray(s - 1, jnp.int32))
+        else:
+            logits, pcaches = self._prefill(
+                self.params, {"tokens": jnp.asarray(tokens_np)[None]})
+        backend.insert(handle, pcaches)
+        return logits[:, -1, :]
+
+    def _decode_active(self, active) -> dict:
+        """One batched decode step; returns {slot: sampled token id}."""
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        for st in active:
+            tokens[st.slot, 0] = st.last_token
+            pos[st.slot] = st.pos
+        caches = self.backend.gather()
+        if self.sample_on_device and all(
+                st.request.sampling.greedy for st in active):
+            # every active row is greedy: argmax decode, none of the
+            # sort/Gumbel machinery (bit-identical to the full sampler)
+            next_tok, caches = self._decode_greedy(
+                self.params, {"tokens": jnp.asarray(tokens)}, caches,
+                jnp.asarray(pos))
+            self.backend.commit(caches)
+            ids = np.asarray(next_tok)
+            return {st.slot: int(ids[st.slot]) for st in active}
+        if self.sample_on_device:
+            temps = np.zeros(self.max_batch, np.float32)
+            topks = np.zeros(self.max_batch, np.int32)
+            seeds = np.zeros(self.max_batch, np.int32)
+            uids = np.zeros(self.max_batch, np.int32)
+            tidx = np.zeros(self.max_batch, np.int32)
+            for st in active:
+                sp = st.request.sampling
+                temps[st.slot] = sp.temperature
+                topks[st.slot] = sp.top_k
+                seeds[st.slot] = sp.seed
+                uids[st.slot] = st.request.uid
+                tidx[st.slot] = len(st.out)
+            next_tok, caches = self._decode_sample(
+                self.params, {"tokens": jnp.asarray(tokens)}, caches,
+                jnp.asarray(pos), jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(seeds), jnp.asarray(uids), jnp.asarray(tidx))
+            self.backend.commit(caches)
+            ids = np.asarray(next_tok)
+            return {st.slot: int(ids[st.slot]) for st in active}
+        logits, caches = self._decode(
+            self.params, {"tokens": jnp.asarray(tokens)}, caches,
+            jnp.asarray(pos))
+        self.backend.commit(caches)
+        rows = np.asarray(logits.astype(jnp.float32))[:, -1,
+                                                      : self.cfg.vocab]
+        return {st.slot: sample_token(rows[st.slot],
+                                      st.request.sampling, st.rng)
+                for st in active}
+
+    def _append_or_preempt(self, sched, backend, st):
+        """Back the request's next cache write with storage; on pool
+        exhaustion preempt the youngest-admitted active request (vLLM
+        recompute-style) until the append succeeds or ``st`` itself was
+        evicted."""
+        while True:
+            try:
+                backend.append(st.handle)
+                return
+            except cache_mod.PoolExhausted:
+                victim = max(sched.active, key=lambda s: s.order)
+                backend.free(victim.handle)
+                sched.preempt(victim.slot)
+                if victim is st:
+                    return
 
     def generate(self, prompts: np.ndarray, sampling=None,
                  n_tokens: int | None = None) -> np.ndarray:

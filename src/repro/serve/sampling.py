@@ -1,20 +1,27 @@
-"""Per-request sampling configuration + host-side token sampling.
+"""Per-request sampling configuration + token sampling (device + host).
 
 ``SamplingParams`` replaces the hard-coded argmax of the old ServeEngine:
 every request carries its own (temperature, top-k, max_tokens, seed), and
-the engine draws from a per-request ``numpy`` generator so a request
-samples the identical token stream whether it is decoded alone or inside a
-continuous batch (the parity the serving tests assert).
+a request samples the identical token stream whether it is decoded alone
+or inside a continuous batch (the parity the serving tests assert).
 
-Sampling runs on the host over the (small) vocab row of the current token.
-At production vocab sizes the draw should move on-device (batched gumbel
-top-k over the sharded logits); that is an open ROADMAP item -- the
-SamplingParams surface is already shaped for it.
+The default path is **on-device**: :func:`sample_tokens_device` draws the
+whole batch inside the jitted decode step -- per-row temperature/top-k via
+``jax.lax.top_k`` and the Gumbel-max trick, with each row's randomness
+derived by ``fold_in``-ing (seed, uid, token-index) so the draw is a
+function of the request alone, never of its batch neighbors.  No host
+round-trip per token; only the sampled ids come back.
+
+:func:`sample_token` is the retained host fallback (numpy generator per
+request, ``InferenceServer(sample_on_device=False)``); greedy decode is
+bit-identical on both paths.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -45,6 +52,48 @@ class SamplingParams:
     @property
     def greedy(self) -> bool:
         return self.temperature == 0.0
+
+
+def sample_tokens_device(logits: jax.Array, temperature: jax.Array,
+                         top_k: jax.Array, seed: jax.Array, uid: jax.Array,
+                         token_index: jax.Array) -> jax.Array:
+    """Batched on-device sampling: (B, V) logits -> (B,) token ids.
+
+    All per-row params are (B,) arrays.  temperature == 0 rows are greedy
+    (argmax, bit-identical to the host fallback); top_k == 0 means no
+    truncation.  Randomness per row is ``fold_in(fold_in(key(seed), uid),
+    token_index)`` -- independent of batch composition, so batched ==
+    solo == streaming, and a preempted request resumed later continues
+    the exact stream (token_index counts tokens sampled so far).
+
+    Jit-friendly: every argument is traced (no per-batch recompiles); the
+    per-row k threshold comes from the full ``lax.top_k`` descending sort
+    + a dynamic take, the draw from argmax(z + Gumbel) over the truncated
+    support.
+    """
+    logits = logits.astype(jnp.float32)
+    b, v = logits.shape
+    greedy_tok = jnp.argmax(logits, axis=-1)
+
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    z = logits / safe_t[:, None]
+    svals, _ = jax.lax.top_k(z, v)                     # descending sort
+    kth_idx = jnp.clip(top_k - 1, 0, v - 1)
+    kth = jnp.take_along_axis(svals, kth_idx[:, None], axis=-1)
+    keep = (top_k <= 0)[:, None] | (z >= kth)
+    z = jnp.where(keep, z, -jnp.inf)
+
+    def row_gumbel(s, u, t):
+        key = jax.random.fold_in(jax.random.fold_in(
+            jax.random.key(s), u), t)
+        return jax.random.gumbel(key, (v,), jnp.float32)
+
+    g = jax.vmap(row_gumbel)(seed.astype(jnp.uint32),
+                             uid.astype(jnp.uint32),
+                             token_index.astype(jnp.uint32))
+    sampled_tok = jnp.argmax(z + g, axis=-1)
+    return jnp.where(temperature > 0, sampled_tok, greedy_tok).astype(
+        jnp.int32)
 
 
 def make_rng(params: SamplingParams, uid: int) -> np.random.Generator:

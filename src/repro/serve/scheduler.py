@@ -3,14 +3,25 @@
 The scheduler owns the request queue and the fixed pool of decode slots.
 The :class:`~repro.serve.engine.InferenceServer` drives it: every decode
 step it first admits pending requests into free slots (the engine prefills
-each admitted request and writes its caches into the slot), then runs one
-batched decode step over the active slots and retires the ones that
-finished.  Requests may arrive over time (``Request.arrival`` in decode
-steps) -- the streaming-arrivals serving mode -- and more requests than
-slots simply queue.
+each admitted request and writes its caches into the cache backend), then
+runs one batched decode step over the active slots and retires the ones
+that finished.  Requests may arrive over time (``Request.arrival`` in
+decode steps) -- the streaming-arrivals serving mode -- and more requests
+than slots simply queue.
 
-Keeping this free of any jax/model state makes admission, arrival gating
-and slot reuse unit-testable in isolation.
+Admission is **memory-aware**: ``pop_admissible`` takes a ``can_admit``
+predicate (the cache backend's admission contract -- "do I have pages for
+this prompt plus a reservation?").  Admission is strictly FCFS: a
+memory-blocked head of queue blocks later requests rather than being
+skipped, so big requests cannot starve.  When the pool runs dry
+mid-decode the engine **preempts** a running request back to the FRONT of
+the queue (:meth:`Scheduler.preempt`); its generated-so-far tokens and
+sampling stream travel with it, and re-admission re-prefills
+``prompt + generated`` -- exactly the computation the decode loop would
+have run, so preemption never changes a request's token stream.
+
+Keeping this free of any jax/model state makes admission, arrival gating,
+preemption and slot reuse unit-testable in isolation.
 """
 from __future__ import annotations
 
@@ -44,8 +55,33 @@ class SlotState:
     remaining: int                     # tokens still to sample
     last_token: int
     out: list
-    rng: np.random.Generator
+    rng: np.random.Generator           # host-fallback sampling stream
     truncated: bool = False
+    order: int = 0                     # admission sequence (preemption
+    #                                    picks the youngest victim)
+    handle: object = None              # CacheHandle of the cache backend
+
+
+@dataclasses.dataclass
+class PendingEntry:
+    """A queued request; ``resume`` carries the state of a preempted one."""
+
+    request: Request
+    resume: Optional[SlotState] = None
+
+    @property
+    def arrival(self) -> int:
+        return 0 if self.resume is not None else self.request.arrival
+
+    def tokens(self) -> np.ndarray:
+        """What prefill runs on admission: the prompt, extended by the
+        already-generated tokens for a preempted request (recompute-style
+        resume)."""
+        prompt = np.asarray(self.request.prompt, np.int32)
+        if self.resume is None:
+            return prompt
+        return np.concatenate(
+            [prompt, np.asarray(self.resume.out, np.int32)])
 
 
 class Scheduler:
@@ -59,8 +95,9 @@ class Scheduler:
         self.max_batch = max_batch
         self.max_len = max_len
         self.slots: list[Optional[SlotState]] = [None] * max_batch
-        self.pending: collections.deque[Request] = collections.deque()
+        self.pending: collections.deque[PendingEntry] = collections.deque()
         self.finished: dict[int, SlotState] = {}
+        self.preemptions = 0
 
     # ------------------------------------------------------------- submit
     def submit(self, request: Request):
@@ -78,9 +115,9 @@ class Scheduler:
         if request.uid in self.finished or any(
                 s is not None and s.request.uid == request.uid
                 for s in self.slots) or any(
-                r.uid == request.uid for r in self.pending):
+                e.request.uid == request.uid for e in self.pending):
             raise ValueError(f"duplicate request uid {request.uid}")
-        self.pending.append(request)
+        self.pending.append(PendingEntry(request))
 
     # ---------------------------------------------------------- admission
     def free_slot(self) -> Optional[int]:
@@ -89,16 +126,21 @@ class Scheduler:
                 return i
         return None
 
-    def pop_admissible(self, now: int):
-        """Next (request, slot) admissible at decode step ``now`` (FIFO
-        among arrived requests), or None."""
+    def pop_admissible(self, now: int, can_admit=None):
+        """Next ``(entry, slot)`` admissible at decode step ``now``, or
+        None.  FIFO among arrived requests; ``can_admit(entry)`` is the
+        cache backend's memory gate -- a blocked head of queue blocks the
+        queue (strict FCFS, no skip-ahead starvation)."""
         slot = self.free_slot()
         if slot is None:
             return None
-        for i, req in enumerate(self.pending):
-            if req.arrival <= now:
-                del self.pending[i]
-                return req, slot
+        for i, entry in enumerate(self.pending):
+            if entry.arrival > now:
+                continue
+            if can_admit is not None and not can_admit(entry):
+                return None            # memory-blocked head: wait
+            del self.pending[i]
+            return entry, slot
         return None
 
     def activate(self, slot: int, state: SlotState):
@@ -110,6 +152,17 @@ class Scheduler:
         assert state is not None, f"slot {slot} is empty"
         self.finished[state.request.uid] = state
         self.slots[slot] = None
+
+    def preempt(self, slot: int) -> SlotState:
+        """Evict a running request back to the FRONT of the queue.  Among
+        successive preemptions the older request ends up ahead (each
+        younger victim was pushed first), preserving FCFS on resume."""
+        state = self.slots[slot]
+        assert state is not None, f"slot {slot} is empty"
+        self.slots[slot] = None
+        self.pending.appendleft(PendingEntry(state.request, resume=state))
+        self.preemptions += 1
+        return state
 
     # ------------------------------------------------------------ queries
     @property
@@ -124,4 +177,4 @@ class Scheduler:
     def next_arrival(self) -> Optional[int]:
         if not self.pending:
             return None
-        return min(r.arrival for r in self.pending)
+        return min(e.arrival for e in self.pending)

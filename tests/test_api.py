@@ -249,6 +249,31 @@ class TestCheckpointResume:
         assert resumed.plan.equals(reference.plan)
         assert resumed.acc_final == reference.acc_final
 
+    def test_in_phase_checkpoints_are_incremental(self, tmp_path):
+        """In-phase saves must carry the train state plus only changed
+        carry leaves (delta vs. the pinned phase-start snapshot) -- not a
+        full carry copy per save -- and still resume."""
+        import numpy as np
+
+        g = cnn.dscnn(width=8)
+        comp = api.Compressor(g, synthetic.GSC_LIKE, batch=8, seed=0)
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        comp.run([api.Warmup(steps=4), api.JointSearch(steps=8, lam=5.0)],
+                 checkpoint=mgr, checkpoint_every=4)
+        mgr.wait()
+
+        tag = 1_000_004                      # search phase, step 4
+        assert tag in mgr.all_steps()
+        meta = mgr.peek_meta(tag)
+        assert meta["carry_base_tag"] == 1_000_000
+        assert meta["carry_delta_keys"] == []     # carry static in-phase
+        with np.load(mgr._fname(tag), allow_pickle=False) as z:
+            keys = [k for k in z.files if k != "__meta__"]
+        assert keys and all(k.startswith("train/") for k in keys)
+        # the pinned base holds the full carry and survives retention GC
+        base_meta = mgr.peek_meta(1_000_000)
+        assert base_meta["boundary"] and base_meta["has_folded"]
+
     def test_hooks_record_metrics(self):
         g = cnn.dscnn(width=8)
         comp = api.Compressor(g, synthetic.GSC_LIKE, batch=8, seed=0)

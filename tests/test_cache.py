@@ -1,0 +1,354 @@
+"""CacheBackend tests: PagedCache page bookkeeping, the scheduler's
+memory-aware admission contract (pool-exhaustion queuing, preemption
+requeue ordering), page free-on-retire leak checks, paged-vs-dense
+token-for-token parity across mixed prompt lengths (float + quantized,
+greedy + seeded device sampling, streaming + preemption), and the
+on-device sampling path vs. the host fallback."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serve import cache as cache_mod
+from repro.serve import engine
+from repro.serve.sampling import SamplingParams, make_rng
+from repro.serve.scheduler import PendingEntry, Request, Scheduler, \
+    SlotState
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = registry.get("llama3.2-1b-smoke")
+    return cfg, lm.init_params(cfg, jax.random.key(0))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=s).astype(np.int32)
+            for s in lens]
+
+
+def _reqs(cfg, lens, sp, gap=0, seed=0):
+    return [Request(uid=i, prompt=p, sampling=sp, arrival=gap * i)
+            for i, p in enumerate(_prompts(cfg, lens, seed))]
+
+
+# ---------------------------------------------------------------------------
+# PagedCache bookkeeping (no model forward involved)
+# ---------------------------------------------------------------------------
+
+class TestPagedBookkeeping:
+    def _backend(self, cfg, **kw):
+        kw.setdefault("page_size", 8)
+        kw.setdefault("n_pages", 6)
+        kw.setdefault("reserve_pages", 1)
+        return cache_mod.PagedCache(cfg, max_batch=2, max_len=32, **kw)
+
+    def test_page_size_must_divide_max_len(self, llama):
+        cfg, _ = llama
+        with pytest.raises(ValueError, match="divide"):
+            cache_mod.PagedCache(cfg, max_batch=2, max_len=32, page_size=5)
+        with pytest.raises(ValueError, match="backend"):
+            cache_mod.make_backend("ring", cfg, 2, 32)
+        with pytest.raises(ValueError, match="no options"):
+            cache_mod.make_backend("dense", cfg, 2, 32, page_size=8)
+
+    def test_alloc_append_free_accounting(self, llama):
+        cfg, _ = llama
+        b = self._backend(cfg)
+        base = b.memory_report()
+        assert base["pages_in_use"] == 0
+        # prompt of 7 + first decode write -> pages_for(8) = 1 page
+        h = b.alloc(uid=0, slot=0, n_prompt=7)
+        assert len(h.pages) == 1 and b.pages_in_use == 1
+        b.append(h)             # next write pos 8 -> page boundary
+        assert len(h.pages) == 2 and b.pages_in_use == 2
+        for _ in range(7):
+            b.append(h)         # pos 9..15: same page
+        assert len(h.pages) == 2
+        b.free(h)
+        after = b.memory_report()
+        assert after["pages_in_use"] == 0
+        assert after["cache_bytes_in_use"] == 0
+        assert after["peak_pages_in_use"] == 2
+        assert after["peak_cache_bytes"] < after["dense_equivalent_bytes"]
+
+    def test_admission_contract_and_exhaustion(self, llama):
+        cfg, _ = llama
+        b = self._backend(cfg)                     # 6 pages, reserve 1
+        # 17-token prompt + first write -> 3 pages; +1 reserve -> needs 4
+        assert b.can_admit(17)
+        h0 = b.alloc(0, 0, 17)
+        assert b.pages_in_use == 3
+        assert not b.can_admit(17)                 # 3 free < 3 + reserve
+        assert b.can_admit(7)                      # 1 + 1 reserve <= 3
+        h1 = b.alloc(1, 1, 15)                     # 2 pages
+        assert b.pages_in_use == 5
+        # drive h0 to a boundary crossing with one free page: ok
+        for _ in range(7):
+            b.append(h0)                           # pos 18..24 (cross at 24)
+        assert b.pages_in_use == 6
+        # next crossing for h1 must raise
+        with pytest.raises(cache_mod.PoolExhausted):
+            for _ in range(16):
+                b.append(h1)
+        b.free(h0)
+        b.free(h1)
+        assert b.memory_report()["pages_in_use"] == 0
+
+    def test_check_feasible(self, llama):
+        cfg, _ = llama
+        b = self._backend(cfg, n_pages=3)
+        with pytest.raises(ValueError, match="never"):
+            # 25 + 7 = 32 tokens -> 4 pages + 1 reserve > 3-page pool
+            b.check_feasible(n_prompt=25, max_tokens=7)
+        b.check_feasible(n_prompt=9, max_tokens=6)    # 2 pages + 1 fits
+
+    def test_ssm_arch_needs_no_pages(self):
+        cfg = registry.get("mamba2-780m-smoke")
+        b = cache_mod.PagedCache(cfg, max_batch=2, max_len=32, page_size=8,
+                                 n_pages=1)
+        assert b.pages_for(100) == 0
+        assert b.can_admit(31)
+        assert b.memory_report()["bytes_per_page"] == 0
+        assert b.memory_report()["ssm_slot_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler: memory-aware admission + preemption bookkeeping
+# ---------------------------------------------------------------------------
+
+class TestMemoryAwareScheduler:
+    def _req(self, uid, s0=4, arrival=0, max_tokens=4):
+        return Request(uid=uid, prompt=np.arange(s0, dtype=np.int32),
+                       sampling=SamplingParams(max_tokens=max_tokens),
+                       arrival=arrival)
+
+    def _state(self, entry, slot):
+        req = entry.request
+        return SlotState(request=req, slot=slot,
+                         pos=entry.tokens().size,
+                         remaining=req.sampling.max_tokens,
+                         last_token=0, out=list(entry.tokens()[
+                             req.prompt.size:]),
+                         rng=make_rng(req.sampling, req.uid))
+
+    def test_memory_blocked_head_queues_fcfs(self):
+        sched = Scheduler(max_batch=4, max_len=32)
+        sched.submit(self._req(0, s0=20))     # big head
+        sched.submit(self._req(1, s0=2))      # small behind it
+        # gate rejects the big head -> nothing admits (no skip-ahead)
+        assert sched.pop_admissible(
+            0, can_admit=lambda e: e.tokens().size < 10) is None
+        # gate opens -> FIFO resumes with the head
+        entry, slot = sched.pop_admissible(0, can_admit=lambda e: True)
+        assert entry.request.uid == 0
+
+    def test_preempt_requeues_front_with_stream(self):
+        sched = Scheduler(max_batch=2, max_len=32)
+        for uid in range(2):
+            sched.submit(self._req(uid))
+        sched.submit(self._req(7, arrival=0))     # waits behind
+        e0, s0 = sched.pop_admissible(0)
+        st0 = self._state(e0, s0)
+        st0.order = 1
+        sched.activate(s0, st0)
+        e1, s1 = sched.pop_admissible(0)
+        st1 = self._state(e1, s1)
+        st1.order = 2
+        sched.activate(s1, st1)
+        st1.out.extend([5, 6])                    # generated so far
+        sched.preempt(s1)
+        assert sched.preemptions == 1
+        # the preempted request is FIRST in line (ahead of uid 7) and its
+        # resume tokens carry prompt + generated stream
+        entry, _ = sched.pop_admissible(0)
+        assert entry.request.uid == 1 and entry.resume is st1
+        np.testing.assert_array_equal(
+            entry.tokens(),
+            np.concatenate([entry.request.prompt, [5, 6]]).astype(np.int32))
+
+    def test_successive_preemptions_keep_fcfs(self):
+        sched = Scheduler(max_batch=2, max_len=32)
+        for uid in range(2):
+            sched.submit(self._req(uid))
+        e0, s0 = sched.pop_admissible(0)
+        st0 = self._state(e0, s0); st0.order = 1
+        sched.activate(s0, st0)
+        e1, s1 = sched.pop_admissible(0)
+        st1 = self._state(e1, s1); st1.order = 2
+        sched.activate(s1, st1)
+        sched.preempt(s1)                  # youngest first
+        sched.preempt(s0)                  # then the older one
+        uids = [e.request.uid for e in sched.pending]
+        assert uids == [0, 1]              # older resumes first
+
+    def test_preempted_uid_still_counts_as_duplicate(self):
+        sched = Scheduler(max_batch=1, max_len=32)
+        sched.submit(self._req(3))
+        e, s = sched.pop_admissible(0)
+        sched.activate(s, self._state(e, s))
+        sched.preempt(s)
+        with pytest.raises(ValueError, match="duplicate"):
+            sched.submit(self._req(3))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: paged == dense, token for token
+# ---------------------------------------------------------------------------
+
+class TestPagedDenseParity:
+    def test_mixed_prompt_lengths_greedy_and_sampled(self, llama):
+        cfg, params = llama
+        dense = engine.InferenceServer(cfg, params, max_len=48, max_batch=2)
+        paged = engine.InferenceServer(cfg, params, max_len=48, max_batch=2,
+                                       cache="paged", page_size=8,
+                                       pages=10)
+        for sp, gap, seed in [
+                (SamplingParams(max_tokens=6), 0, 0),
+                (SamplingParams(temperature=0.8, top_k=12, max_tokens=5,
+                                seed=11), 3, 1)]:
+            lens = (4, 13, 7, 9)
+            ref = dense.serve(_reqs(cfg, lens, sp, seed=seed))
+            out = paged.serve(_reqs(cfg, lens, sp, gap=gap, seed=seed))
+            for i in range(len(lens)):
+                np.testing.assert_array_equal(ref[i], out[i])
+        mem = paged.stats["memory"]
+        assert mem["peak_cache_bytes"] < mem["dense_equivalent_bytes"]
+        assert mem["pages_in_use"] == 0          # free-on-retire: no leak
+
+    def test_quantized_plan_paged_parity_and_memory(self, llama):
+        cfg, params = llama
+        plan = engine.synthetic_plan(cfg, params, bits=None, seed=0)
+        dense = engine.InferenceServer(cfg, params, plan=plan, max_len=48,
+                                       max_batch=2)
+        paged = engine.InferenceServer(cfg, params, plan=plan, max_len=48,
+                                       max_batch=2, cache="paged",
+                                       page_size=8, pages=9)
+        sp = SamplingParams(max_tokens=6)
+        lens = (5, 11, 8)
+        ref = dense.serve(_reqs(cfg, lens, sp, seed=2))
+        out = paged.serve(_reqs(cfg, lens, sp, gap=2, seed=2))
+        for i in range(len(lens)):
+            np.testing.assert_array_equal(ref[i], out[i])
+        mem = paged.stats["memory"]
+        assert mem["pages_in_use"] == 0
+        assert 0 < mem["peak_cache_bytes"] < mem["dense_equivalent_bytes"]
+
+    def test_pool_exhaustion_preempts_and_stays_exact(self, llama):
+        cfg, params = llama
+        sp = SamplingParams(temperature=0.6, top_k=10, max_tokens=8,
+                            seed=3)
+        lens = (4, 9, 6, 13)
+        dense = engine.InferenceServer(cfg, params, max_len=32,
+                                       max_batch=3)
+        ref = dense.serve(_reqs(cfg, lens, sp))
+        tiny = engine.InferenceServer(cfg, params, max_len=32, max_batch=3,
+                                      cache="paged", page_size=4, pages=7)
+        out = tiny.serve(_reqs(cfg, lens, sp))
+        assert tiny.stats["preemptions"] > 0
+        for i in range(len(lens)):
+            np.testing.assert_array_equal(ref[i], out[i])
+        assert tiny.stats["memory"]["pages_in_use"] == 0
+
+    def test_page_size_one_under_preemption(self, llama):
+        """Worst case for append idempotency: every token is a page
+        boundary, and the engine's preempt-and-retry loop must not
+        double-advance a handle whose append raised PoolExhausted."""
+        cfg, params = llama
+        sp = SamplingParams(max_tokens=6)
+        lens = (4, 7, 5)
+        dense = engine.InferenceServer(cfg, params, max_len=16,
+                                       max_batch=2)
+        ref = dense.serve(_reqs(cfg, lens, sp, seed=7))
+        tiny = engine.InferenceServer(cfg, params, max_len=16, max_batch=2,
+                                      cache="paged", page_size=1,
+                                      pages=14)
+        out = tiny.serve(_reqs(cfg, lens, sp, seed=7))
+        assert tiny.stats["preemptions"] > 0
+        for i in range(len(lens)):
+            np.testing.assert_array_equal(ref[i], out[i])
+        assert tiny.stats["memory"]["pages_in_use"] == 0
+
+    def test_infeasible_request_rejected_up_front(self, llama):
+        cfg, params = llama
+        srv = engine.InferenceServer(cfg, params, max_len=32, max_batch=2,
+                                     cache="paged", page_size=4, pages=3)
+        sp = SamplingParams(max_tokens=12)
+        with pytest.raises(ValueError, match="never"):
+            srv.serve(_reqs(cfg, (16,), sp))
+
+    def test_hybrid_arch_kv_pages_plus_ssm_slots(self):
+        """jamba: attention layers page, mamba layers use the slot pool,
+        prefill stays exact-length (padding would pollute the SSM state)."""
+        cfg = registry.get("jamba-1.5-large-398b-smoke")
+        params = lm.init_params(cfg, jax.random.key(0))
+        dense = engine.InferenceServer(cfg, params, max_len=48,
+                                       max_batch=2)
+        paged = engine.InferenceServer(cfg, params, max_len=48,
+                                       max_batch=2, cache="paged",
+                                       page_size=8, pages=8)
+        assert not paged._bucketed
+        sp = SamplingParams(max_tokens=4)
+        ref = dense.serve(_reqs(cfg, (7, 12), sp, seed=3))
+        out = paged.serve(_reqs(cfg, (7, 12), sp, seed=3))
+        for i in range(2):
+            np.testing.assert_array_equal(ref[i], out[i])
+        mem = paged.stats["memory"]
+        assert mem["ssm_slot_bytes"] > 0 and mem["peak_pages_in_use"] > 0
+
+    def test_ssm_arch_on_paged_backend(self):
+        cfg = registry.get("mamba2-780m-smoke")
+        params = lm.init_params(cfg, jax.random.key(1))
+        dense = engine.InferenceServer(cfg, params, max_len=48,
+                                       max_batch=2)
+        paged = engine.InferenceServer(cfg, params, max_len=48,
+                                       max_batch=2, cache="paged",
+                                       page_size=8)
+        sp = SamplingParams(max_tokens=4)
+        ref = dense.serve(_reqs(cfg, (33, 17), sp, seed=2))
+        out = paged.serve(_reqs(cfg, (33, 17), sp, seed=2))
+        for i in range(2):
+            np.testing.assert_array_equal(ref[i], out[i])
+
+
+# ---------------------------------------------------------------------------
+# on-device sampling vs. the host fallback
+# ---------------------------------------------------------------------------
+
+class TestOnDeviceSampling:
+    def test_greedy_device_equals_host(self, llama):
+        cfg, params = llama
+        dev = engine.InferenceServer(cfg, params, max_len=48, max_batch=2)
+        host = engine.InferenceServer(cfg, params, max_len=48, max_batch=2,
+                                      sample_on_device=False)
+        sp = SamplingParams(max_tokens=6)
+        a = dev.serve(_reqs(cfg, (5, 9), sp, seed=4))
+        b = host.serve(_reqs(cfg, (5, 9), sp, seed=4))
+        for i in range(2):
+            np.testing.assert_array_equal(a[i], b[i])
+
+    def test_host_fallback_keeps_batched_solo_parity(self, llama):
+        cfg, params = llama
+        host = engine.InferenceServer(cfg, params, max_len=48, max_batch=2,
+                                      sample_on_device=False)
+        sp = SamplingParams(temperature=0.9, top_k=8, max_tokens=5,
+                            seed=5)
+        reqs = _reqs(cfg, (6, 6, 6), sp, seed=5)
+        both = host.serve(reqs)
+        solo = host.serve([reqs[1]])
+        np.testing.assert_array_equal(both[1], solo[1])
+
+    def test_device_sampling_respects_top_k_and_seed(self, llama):
+        cfg, params = llama
+        srv = engine.InferenceServer(cfg, params, max_len=48, max_batch=2)
+        sp1 = SamplingParams(temperature=1.0, top_k=2, max_tokens=8,
+                             seed=0)
+        sp2 = SamplingParams(temperature=1.0, top_k=2, max_tokens=8,
+                             seed=9)
+        r1 = srv.serve(_reqs(cfg, (6,), sp1, seed=6))
+        r1b = srv.serve(_reqs(cfg, (6,), sp1, seed=6))
+        r2 = srv.serve(_reqs(cfg, (6,), sp2, seed=6))
+        np.testing.assert_array_equal(r1[0], r1b[0])   # deterministic
+        assert not np.array_equal(r1[0], r2[0])        # seed matters

@@ -107,15 +107,15 @@ class TestScheduler:
         sched = Scheduler(max_batch=2, max_len=32)
         for uid in range(3):
             sched.submit(self._req(uid))
-        r0, s0 = sched.pop_admissible(0)
-        sched.activate(s0, _dummy_state(r0, s0))
-        r1, s1 = sched.pop_admissible(0)
-        sched.activate(s1, _dummy_state(r1, s1))
-        assert (r0.uid, r1.uid) == (0, 1)
+        e0, s0 = sched.pop_admissible(0)
+        sched.activate(s0, _dummy_state(e0, s0))
+        e1, s1 = sched.pop_admissible(0)
+        sched.activate(s1, _dummy_state(e1, s1))
+        assert (e0.request.uid, e1.request.uid) == (0, 1)
         assert sched.pop_admissible(0) is None     # slots full
         sched.complete(s0)
-        r2, s2 = sched.pop_admissible(0)
-        assert r2.uid == 2 and s2 == s0            # freed slot reused
+        e2, s2 = sched.pop_admissible(0)
+        assert e2.request.uid == 2 and s2 == s0    # freed slot reused
         assert sched.has_work
 
     def test_arrival_gating(self):
@@ -123,8 +123,8 @@ class TestScheduler:
         sched.submit(self._req(0, arrival=5))
         assert sched.pop_admissible(4) is None
         assert sched.next_arrival == 5
-        req, _ = sched.pop_admissible(5)
-        assert req.uid == 0
+        entry, _ = sched.pop_admissible(5)
+        assert entry.request.uid == 0
 
     def test_validation(self):
         sched = Scheduler(max_batch=1, max_len=8)
@@ -135,8 +135,9 @@ class TestScheduler:
             sched.submit(self._req(1))
 
 
-def _dummy_state(req, slot):
+def _dummy_state(entry, slot):
     from repro.serve.scheduler import SlotState
+    req = entry.request
     return SlotState(request=req, slot=slot, pos=req.prompt.size,
                      remaining=req.sampling.max_tokens, last_token=0,
                      out=[], rng=make_rng(req.sampling, req.uid))
