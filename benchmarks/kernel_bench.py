@@ -1,13 +1,22 @@
 """Kernel micro-benchmarks: wall time of the jnp oracle path on CPU plus
 HBM-traffic accounting for the fused Pallas path (the structural win: the
-fused kernel reads W once instead of once per precision).
+fused kernel reads W once instead of once per precision; the paged-
+attention kernel reads live pages instead of the dense table width).
+
+Emits ``BENCH_kernels.json`` (one row per kernel with the measured
+oracle-path wall time and the derived traffic model) and prints the
+orchestrator's ``name,us_per_call,derived`` CSV lines.
 
 NOTE: on this CPU container the Pallas kernels execute in interpret mode
 (Python), so wall-clock µs of the kernel path is not meaningful; the
 reported `derived` column carries the traffic model that holds on TPU.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--out BENCH_kernels.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -15,8 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.mps_combine import ref as mref
+from repro.kernels.paged_attention import ref as pref
 from repro.kernels.quant_matmul import ops as qops, ref as qref
 from repro.kernels.ssd_scan import ref as sref
+
+SCHEMA_VERSION = 1
 
 
 def _time(fn, *args, n=5):
@@ -25,6 +37,12 @@ def _time(fn, *args, n=5):
     for _ in range(n):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / n
+
+
+def _row(name, t_s, derived):
+    print(f"kernels/{name},{t_s * 1e6:.0f},{derived}")
+    return {"name": name, "us_per_call": round(t_s * 1e6, 1),
+            "derived": derived}
 
 
 def bench_mps_combine():
@@ -37,8 +55,8 @@ def bench_mps_combine():
     # each quantized variant + read them for the combine; fused = 1R + 1W
     naive_bytes = (3 + 3 * 2 + 1) * m * k * 4
     fused_bytes = 2 * m * k * 4
-    print(f"kernels/mps_combine,{t*1e6:.0f},"
-          f"traffic_reduction={naive_bytes/fused_bytes:.1f}x")
+    return [_row("mps_combine", t,
+                 f"traffic_reduction={naive_bytes / fused_bytes:.1f}x")]
 
 
 def bench_quant_matmul():
@@ -46,6 +64,7 @@ def bench_quant_matmul():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
     xq, sx = qref.quantize_activations(x)
+    rows = []
     for bits in (8, 4, 2):
         lim = 2 ** (bits - 1)
         wq = rng.integers(-lim + 1, lim, size=(n, k)).astype(np.int8)
@@ -54,9 +73,11 @@ def bench_quant_matmul():
                                                                   d))
         t = _time(jitted, xq, jnp.asarray(wq), sw, sx)
         w_bytes_packed = n * k * bits // 8
-        print(f"kernels/quant_matmul_w{bits},{t*1e6:.0f},"
-              f"weight_bytes={w_bytes_packed};"
-              f"vs_bf16={2*n*k/w_bytes_packed:.1f}x_smaller")
+        rows.append(_row(
+            f"quant_matmul_w{bits}", t,
+            f"weight_bytes={w_bytes_packed};"
+            f"vs_bf16={2 * n * k / w_bytes_packed:.1f}x_smaller"))
+    return rows
 
 
 def bench_ssd_scan():
@@ -68,15 +89,63 @@ def bench_ssd_scan():
     jitted = jax.jit(sref.ssd_scan_ref)
     t = _time(jitted, dec, s_in, s0)
     state_bytes = h * p * n * 4
-    print(f"kernels/ssd_scan,{t*1e6:.0f},"
-          f"vmem_resident_state={state_bytes/1024:.0f}kB;"
-          f"hbm_roundtrips_saved={c}")
+    return [_row("ssd_scan", t,
+                 f"vmem_resident_state={state_bytes / 1024:.0f}kB;"
+                 f"hbm_roundtrips_saved={c}")]
 
 
-def main():
-    bench_mps_combine()
-    bench_quant_matmul()
-    bench_ssd_scan()
+def bench_paged_attention():
+    """Decode attention over the page pool at a realistic serving fill:
+    slots hold mixed live lengths, the table width covers max_len.  The
+    structural win on TPU: the kernel streams only the LIVE pages of
+    each slot's block table (never-written pages hit the pl.when skip
+    and the null-page DMA dedup), while the pre-kernel gather path read
+    -- and materialized -- the full dense (B, max_len) width per step.
+    """
+    b, h, hkv, hd = 8, 8, 2, 64
+    ps, n_pb = 16, 16                      # max_len 256
+    lens = [(i * 37) % (ps * n_pb) + 1 for i in range(b)]  # mixed fill
+    rng = np.random.default_rng(0)
+    n_pages = sum(-(-s // ps) for s in lens)
+    pool_k = jnp.asarray(rng.normal(
+        size=(n_pages + 1, ps, hkv, hd)).astype(np.float32))
+    pool_v = jnp.asarray(rng.normal(
+        size=(n_pages + 1, ps, hkv, hd)).astype(np.float32))
+    tables = np.zeros((b, n_pb), np.int32)
+    nxt = 1
+    for bi, s in enumerate(lens):
+        for p in range(-(-s // ps)):
+            tables[bi, p] = nxt
+            nxt += 1
+    tables = jnp.asarray(tables)
+    pos = jnp.asarray([s - 1 for s in lens], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(b, h, hd)).astype(np.float32))
+    jitted = jax.jit(pref.paged_attention_view)
+    t = _time(jitted, q, pool_k, pool_v, tables, pos)
+    kv_bytes = 2 * ps * hkv * hd * 4                  # K+V, f32 here
+    dense_read = b * n_pb * kv_bytes                  # full table width
+    live_read = sum(-(-s // ps) for s in lens) * kv_bytes
+    return [_row(
+        "paged_attention", t,
+        f"live_page_bytes={live_read};dense_width_bytes={dense_read};"
+        f"hbm_read_reduction={dense_read / live_read:.1f}x")]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    rows = []
+    rows += bench_mps_combine()
+    rows += bench_quant_matmul()
+    rows += bench_ssd_scan()
+    rows += bench_paged_attention()
+    report = {"benchmark": "kernels", "schema_version": SCHEMA_VERSION,
+              "backend": jax.default_backend(), "results": rows}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[kernel_bench] wrote {args.out}")
 
 
 if __name__ == "__main__":

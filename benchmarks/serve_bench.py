@@ -10,7 +10,11 @@ cache backend's peak memory) and prints the orchestrator's
 The dense-vs-paged pairs run the SAME streaming mixed-prompt-length
 workload and must produce identical tokens (asserted); the paged rows
 additionally record peak cache bytes, which scale with live tokens
-instead of the dense ``max_batch * max_len`` pin.
+instead of the dense ``max_batch * max_len`` pin.  Every row carries the
+per-step decode latency split (``gather_us_per_step`` -- assembling the
+step inputs from the cache backend -- vs. ``step_us_per_step`` -- the
+jitted decode itself), which is where the device-resident block tables
+show up: paged gather no longer rebuilds host tables per step.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--arch ...] \
         [--out BENCH_serve.json]
@@ -52,26 +56,22 @@ def make_requests(cfg, n, prompt_lens, tokens, gap):
             for i in range(n)]
 
 
-def bench_variant(name, cfg, params, plan, requests, max_len, max_batch,
-                  cache="dense", page_size=16, pages=None):
-    server = engine.InferenceServer(cfg, params, plan=plan,
-                                    max_len=max_len, max_batch=max_batch,
-                                    cache=cache, page_size=page_size,
-                                    pages=pages)
-    server.serve(requests)                # compile + warm caches
-    t0 = time.time()
-    out = server.serve(requests)
-    wall = time.time() - t0
+def _row_from(stats, name, cache, wall, out, plan):
+    """Build one result row from a serve() stats snapshot.  `stats` must
+    come from the SAME repeat as `wall` (the best one), or the per-step
+    latency split would describe a different run than the wall time."""
     tokens = int(sum(len(r) for r in out.values()))
-    mem = server.stats["memory"]
+    mem = stats["memory"]
     row = {
         "name": name,
         "cache": cache,
         "tokens": tokens,
         "wall_s": round(wall, 4),
         "tok_per_s": round(tokens / wall, 2),
-        "decode_steps": server.stats["decode_steps"],
-        "preemptions": server.stats["preemptions"],
+        "decode_steps": stats["decode_steps"],
+        "preemptions": stats["preemptions"],
+        "gather_us_per_step": stats["gather_us_per_step"],
+        "step_us_per_step": stats["step_us_per_step"],
         "peak_cache_bytes": mem["peak_cache_bytes"]
         if cache == "paged" else mem["cache_bytes"],
         "plan": None,
@@ -90,13 +90,72 @@ def bench_variant(name, cfg, params, plan, requests, max_len, max_batch,
     return row, out
 
 
+def bench_variant(name, cfg, params, plan, requests, max_len, max_batch,
+                  repeats=3):
+    """Single dense-backend variant (paged rows go through
+    :func:`bench_pair`, which measures the backends interleaved)."""
+    server = engine.InferenceServer(cfg, params, plan=plan,
+                                    max_len=max_len, max_batch=max_batch)
+    server.serve(requests)                # compile + warm caches
+    wall = float("inf")                   # best-of-N: the wall times are
+    for _ in range(repeats):              # tens of ms, CPU noise is not
+        t0 = time.time()                  # (identical tokens every run)
+        out = server.serve(requests)
+        w = time.time() - t0
+        if w < wall:
+            wall, stats = w, server.stats
+    return _row_from(stats, name, "dense", wall, out, plan)
+
+
+def bench_pair(name, cfg, params, plan, requests, max_len, max_batch,
+               page_size, repeats=5):
+    """Dense vs. paged on the SAME workload, measured INTERLEAVED
+    (dense, paged, dense, paged, ...) with best-of-N walls, so drifting
+    background load on the benchmark host hits both variants alike.
+    Token streams are asserted identical.
+
+    The paged server gets a pool of HALF the dense-equivalent capacity
+    -- the memory-bounded deployment point paging exists for (dense
+    cannot run below ``max_batch * max_len`` at all); the default
+    workload's peak fits without preemption (recorded in the row)."""
+    pages = (max_batch * max_len // page_size) // 2
+    dense = engine.InferenceServer(cfg, params, plan=plan,
+                                   max_len=max_len, max_batch=max_batch)
+    paged = engine.InferenceServer(cfg, params, plan=plan,
+                                   max_len=max_len, max_batch=max_batch,
+                                   cache="paged", page_size=page_size,
+                                   pages=pages)
+    dense.serve(requests)
+    paged.serve(requests)
+    wall_d = wall_p = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        out_d = dense.serve(requests)
+        w = time.time() - t0
+        if w < wall_d:
+            wall_d, stats_d = w, dense.stats
+        t0 = time.time()
+        out_p = paged.serve(requests)
+        w = time.time() - t0
+        if w < wall_p:
+            wall_p, stats_p = w, paged.stats
+    for uid in out_d:
+        np.testing.assert_array_equal(out_d[uid], out_p[uid])
+    row_d, _ = _row_from(stats_d, name, "dense", wall_d, out_d, plan)
+    row_p, _ = _row_from(stats_p, f"{name}-paged", "paged", wall_p,
+                         out_p, plan)
+    return row_d, row_p
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b-smoke")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=16)
+    # decode-weighted default: this is a decode-throughput benchmark (the
+    # admission path amortizes over the generated tokens, as in serving)
+    ap.add_argument("--tokens", type=int, default=48)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--arrival-gap", type=int, default=2)
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -117,27 +176,32 @@ def main(argv=None):
 
     results = []
     for name, plan in variants:
-        row, out_dense = bench_variant(
-            name, cfg, params, plan, requests, args.max_len,
-            args.max_batch)
-        results.append(row)
-        print(f"serve/{name},{row['wall_s'] * 1e6:.0f},"
-              f"tok_per_s={row['tok_per_s']}")
         # paged counterpart for the trajectory headliners only (float +
-        # mixed plan): same workload, identical tokens, measured memory
+        # mixed plan): same workload, identical tokens (asserted inside
+        # bench_pair), interleaved measurement, paged memory recorded
         if name in ("float", "quant-mixed"):
-            prow, out_paged = bench_variant(
-                f"{name}-paged", cfg, params, plan, requests,
-                args.max_len, args.max_batch, cache="paged",
-                page_size=args.page_size)
-            for uid in out_dense:
-                np.testing.assert_array_equal(out_dense[uid],
-                                              out_paged[uid])
-            results.append(prow)
+            row, prow = bench_pair(name, cfg, params, plan, requests,
+                                   args.max_len, args.max_batch,
+                                   args.page_size)
+            results += [row, prow]
+            print(f"serve/{name},{row['wall_s'] * 1e6:.0f},"
+                  f"tok_per_s={row['tok_per_s']},"
+                  f"gather_us={row['gather_us_per_step']},"
+                  f"step_us={row['step_us_per_step']}")
             print(f"serve/{prow['name']},{prow['wall_s'] * 1e6:.0f},"
                   f"tok_per_s={prow['tok_per_s']},"
+                  f"gather_us={prow['gather_us_per_step']},"
+                  f"step_us={prow['step_us_per_step']},"
                   f"peak_cache_bytes={prow['peak_cache_bytes']},"
                   f"dense_bytes={prow['dense_equivalent_bytes']}")
+            continue
+        row, _ = bench_variant(name, cfg, params, plan, requests,
+                               args.max_len, args.max_batch)
+        results.append(row)
+        print(f"serve/{name},{row['wall_s'] * 1e6:.0f},"
+              f"tok_per_s={row['tok_per_s']},"
+              f"gather_us={row['gather_us_per_step']},"
+              f"step_us={row['step_us_per_step']}")
 
     report = {
         "benchmark": "serve",

@@ -1,0 +1,78 @@
+"""Dispatch wrapper for paged decode attention: kernel on TPU, gathered
+view off-TPU, exact-mirror reference for tests.
+
+``impl`` resolution (also overridable process-wide via :func:`force_impl`
+for tests):
+
+* ``"kernel"`` -- the Pallas kernel (compiled on TPU, interpret mode
+  elsewhere).  The production TPU path.
+* ``"view"``   -- ``ref.paged_attention_view``: gathered dense view +
+  the dense decode-attention op sequence; bitwise identical to the
+  dense cache backend, and the fast formulation for CPU/GPU where the
+  pool gather compiles to one fused XLA op.
+* ``"ref"``    -- ``ref.paged_attention_ref``: the bitwise mirror of the
+  kernel (python-looped; oracle only).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+from repro.kernels.paged_attention import kernel as _k
+from repro.kernels.paged_attention import ref as _ref
+
+paged_attention_ref = _ref.paged_attention_ref
+paged_attention_view = _ref.paged_attention_view
+
+_IMPLS = ("kernel", "view", "ref")
+_impl_override: str | None = None
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(impl: str | None = None) -> str:
+    if impl is None:
+        impl = _impl_override
+    if impl is None:
+        impl = "kernel" if _on_tpu() else "view"
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown paged-attention impl {impl!r} "
+                         f"(expected one of {_IMPLS})")
+    return impl
+
+
+@contextlib.contextmanager
+def force_impl(impl: str | None):
+    """Test hook: pin the implementation for every call in the block."""
+    global _impl_override
+    prev = _impl_override
+    _impl_override = resolve_impl(impl) if impl is not None else None
+    try:
+        yield
+    finally:
+        _impl_override = prev
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    tables: jax.Array, pos: jax.Array, *, window: int = 0,
+                    chunked: bool = False, cap: float = 0.0,
+                    impl: str | None = None) -> jax.Array:
+    """Decode attention over the page pool.  q: (B, H, D);
+    k_pool/v_pool: (n_pages + 1, page_size, Hkv, D); tables: (B, P)
+    physical page ids (0 = null); pos: (B,) per-slot positions.
+    Returns (B, H, D) in q's dtype."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.paged_attention_ref(q, k_pool, v_pool, tables, pos,
+                                        window=window, chunked=chunked,
+                                        cap=cap)
+    if impl == "view":
+        return _ref.paged_attention_view(q, k_pool, v_pool, tables, pos,
+                                         window=window, chunked=chunked,
+                                         cap=cap)
+    return _k.paged_attention_fwd(q, k_pool, v_pool, tables, pos,
+                                  window=window, chunked=chunked, cap=cap,
+                                  interpret=not _on_tpu())

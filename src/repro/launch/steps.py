@@ -97,8 +97,12 @@ def make_bucketed_prefill_step(cfg: ArchConfig):
 
 
 def make_decode_step(cfg: ArchConfig):
-    def step_fn(params, token_batch, caches, pos):
-        return lm.decode_step(cfg, params, token_batch, caches, pos)
+    """``tables`` is the paged-serving block-table array (None for dense
+    caches); it rides outside the cache tree so the engine can donate the
+    caches while the device-resident tables survive across steps."""
+    def step_fn(params, token_batch, caches, pos, tables=None):
+        return lm.decode_step(cfg, params, token_batch, caches, pos,
+                              tables=tables)
     return step_fn
 
 

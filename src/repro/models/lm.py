@@ -291,7 +291,7 @@ def _make_effective_w(ctx: Optional[mps.SearchCtx], precisions):
 
 
 def _layer_apply(cfg, spec: LayerSpec, p, x, *, mode, cache, pos,
-                 enc_out, getw):
+                 enc_out, getw, tables=None):
     if getw is None:
         getw = _make_effective_w(None, cfg.mps_precisions)
     mixer_kind = {"attn": "full", "attn_local": "local",
@@ -311,7 +311,7 @@ def _layer_apply(cfg, spec: LayerSpec, p, x, *, mode, cache, pos,
             p["mixer"], h, cfg, kind=mixer_kind[spec.mixer],
             mode=("train" if mode == "train" else mode),
             cache=None if cache is None else cache.get("kv"),
-            pos=pos, effective_w=getw)
+            pos=pos, effective_w=getw, tables=tables)
         if kv is not None:
             new_cache["kv"] = kv
     x = x + y
@@ -336,8 +336,12 @@ def _layer_apply(cfg, spec: LayerSpec, p, x, *, mode, cache, pos,
 
 
 def _run_stack(cfg, pattern, stack_params, x, *, mode, caches, pos,
-               enc_out, getw, remat: bool, blk_logical=None):
+               enc_out, getw, remat: bool, blk_logical=None, tables=None):
     """scan over super-blocks. caches: pytree stacked on axis 0 or None.
+
+    tables: paged-decode block tables (B, P), shared by every layer (one
+    physical page id backs a token position across ALL layers, so the
+    table is scan-invariant and closed over, not scanned).
 
     blk_logical: logical-axis tree matching one *sliced* block (leading
     'layers' axis stripped). Constraining the sliced weights inside the
@@ -363,7 +367,8 @@ def _run_stack(cfg, pattern, stack_params, x, *, mode, caches, pos,
             cache_i = None if blk_cache is None else blk_cache.get(f"l{i}")
             xv, nc = _layer_apply(cfg, spec, blk_params[f"l{i}"], xv,
                                   mode=mode, cache=cache_i, pos=pos,
-                                  enc_out=enc_out, getw=getw)
+                                  enc_out=enc_out, getw=getw,
+                                  tables=tables)
             if nc is not None:
                 new_caches[f"l{i}"] = nc
         return xv.astype(in_dtype), (new_caches or None)
@@ -377,7 +382,7 @@ def _run_stack(cfg, pattern, stack_params, x, *, mode, caches, pos,
 
 
 def _run_stack_unrolled(cfg, pattern, per_sb_params, x, *, mode, caches,
-                        pos, enc_out, getw):
+                        pos, enc_out, getw, tables=None):
     """Python-unrolled counterpart of :func:`_run_stack` for parameter
     trees whose super-blocks are a tuple of per-block trees instead of one
     stacked pytree.  Plan-quantized serving needs this: each block's
@@ -394,7 +399,8 @@ def _run_stack_unrolled(cfg, pattern, per_sb_params, x, *, mode, caches,
             cache_i = None if blk_cache is None else blk_cache.get(f"l{i}")
             x, nc = _layer_apply(cfg, spec, blk_params[f"l{i}"], x,
                                  mode=mode, cache=cache_i, pos=pos,
-                                 enc_out=enc_out, getw=getw)
+                                 enc_out=enc_out, getw=getw,
+                                 tables=tables)
             if nc is not None:
                 new_caches[f"l{i}"] = nc
         per_sb_caches.append(new_caches or None)
@@ -447,7 +453,7 @@ def _encode(cfg, params, batch, getw=None):
 
 def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
             caches=None, pos=None, ctx: Optional[mps.SearchCtx] = None,
-            logits_mode: str = "full", last_pos=None):
+            logits_mode: str = "full", last_pos=None, tables=None):
     """Returns (logits | hidden, new_caches).
 
     batch keys: tokens (B, S) int32 | embeddings (B, S, D) for stub
@@ -460,6 +466,9 @@ def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
     instead of S-1 -- page-bucketed prefill pads the prompt to a page
     boundary and reads the logits of the last REAL token (causal attention
     makes every position <= last_pos independent of the padding).
+    tables: paged decode only -- (B, P) int32 block tables; `caches`
+    KV leaves are then page pools (see ``init_paged_caches``) and the
+    attention layers run the paged-attention kernel in place.
     """
     getw = _make_effective_w(ctx, cfg.mps_precisions)
     enc_out = None
@@ -472,14 +481,16 @@ def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
         # per super-block, PackedLinear weights, Python-unrolled
         x, new_caches = _run_stack_unrolled(
             cfg, block_pattern(cfg), params["blocks"], x, mode=mode,
-            caches=caches, pos=pos, enc_out=enc_out, getw=getw)
+            caches=caches, pos=pos, enc_out=enc_out, getw=getw,
+            tables=tables)
     else:
         x, new_caches = _run_stack(
             cfg, block_pattern(cfg), params["blocks"], x, mode=mode,
             caches=caches, pos=pos, enc_out=enc_out, getw=getw,
             remat=remat,
             blk_logical=_sliced_block_logical(
-                cfg, _has_gamma(params["blocks"])))
+                cfg, _has_gamma(params["blocks"])),
+            tables=tables)
     x = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     if logits_mode == "hidden":
         return x, new_caches
@@ -726,13 +737,16 @@ def prefill(cfg: ArchConfig, params, batch):
     return logits, caches
 
 
-def decode_step(cfg: ArchConfig, params, token_batch, caches, pos):
+def decode_step(cfg: ArchConfig, params, token_batch, caches, pos,
+                tables=None):
     """One-token decode. token_batch: {"tokens": (B, 1)} (or embeddings);
     pos: () int32 shared position, or (B,) int32 per-sequence positions
     (continuous batching: every slot decodes at its own offset).
+    tables: (B, P) int32 block tables when `caches` holds page pools
+    (paged serving); None for dense caches.
     Returns (logits (B, 1, V), caches)."""
     logits, new_caches = forward(cfg, params, token_batch, mode="decode",
-                                 caches=caches, pos=pos)
+                                 caches=caches, pos=pos, tables=tables)
     return logits, new_caches
 
 

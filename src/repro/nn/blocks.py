@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding
+from repro.kernels.paged_attention import ops as paged_ops
 from repro.nn import quantized as nnq
 
 # ---------------------------------------------------------------------------
@@ -201,6 +202,23 @@ def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, tables: jax.Array,
+                           pos: jax.Array, *, window: int = 0,
+                           chunked: bool = False, cap: float = 0.0
+                           ) -> jax.Array:
+    """One-token attention straight over the KV page pool (no dense
+    gather).  q: (B, 1, H, D); k_pool/v_pool: (n_pages + 1, page_size,
+    Hkv, D); tables: (B, P) physical page ids (0 = reserved null page);
+    pos: (B,) per-slot positions.  Dispatches to the Pallas kernel on
+    TPU and to the gathered-view reference (bitwise identical to
+    :func:`decode_attention` over the dense row) off-TPU."""
+    out = paged_ops.paged_attention(q[:, 0], k_pool, v_pool, tables, pos,
+                                    window=window, chunked=chunked,
+                                    cap=cap)
+    return out[:, None]
+
+
 # ---------------------------------------------------------------------------
 # attention layer (projections + cache plumbing)
 # ---------------------------------------------------------------------------
@@ -209,12 +227,19 @@ def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
 def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
                     mode: str = "train", cache=None, pos=None,
                     kv_input: Optional[jax.Array] = None,
-                    effective_w=None):
+                    effective_w=None, tables=None):
     """kind: full | local | chunked | bidir | cross.
 
     Returns (y, new_cache). cache = {"k","v"} of (B, S, Hkv, D); for
     mode="prefill" the produced K/V are returned as the new cache; for
     mode="decode" the token's K/V are written at `pos`.
+
+    tables (decode only): (B, P) int32 per-slot block tables of a
+    :class:`~repro.serve.cache.PagedCache` -- cache["k"/"v"] are then
+    page POOLS of shape (n_pages + 1, page_size, Hkv, D) and attention
+    runs directly on the pool (see :func:`paged_decode_attention`); the
+    tables ride OUTSIDE the (donated) cache tree so the device copy
+    survives across steps.
     """
     b, s, _ = x.shape
     h, hkv, hd = cfg.h_eff, cfg.hkv_eff, cfg.head_dim
@@ -253,46 +278,48 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
         pos_rope = posn[None] if posn.ndim == 0 else posn[:, None]
         q = rope(q, pos_rope, cfg.rope_theta)
         kk = rope(kk, pos_rope, cfg.rope_theta)
-        if cache is not None and "table" in cache:
+        if cache is not None and tables is not None:
             # paged KV (serve.cache.PagedCache): cache["k"/"v"] are page
-            # pools (n_pages, page_size, hkv, hd), cache["table"] the
-            # per-slot block tables (B, P) of physical page ids.  Scatter
-            # the token's K/V at (table[b, pos//ps], pos%ps), then gather
-            # the slot's pages into a logically-ordered (B, P*ps, hkv, hd)
-            # view -- when page_size divides max_len this view is
-            # element-for-element the dense cache row, so attention is
-            # bitwise identical to the dense backend (stale page content
-            # only ever appears at masked positions).
-            table = cache["table"]                       # (B, P)
+            # pools (n_pages + 1, page_size, hkv, hd), `tables` the
+            # per-slot block tables (B, P) of physical page ids.  The
+            # step's only cache write is the token's (B,) K/V rows
+            # scattered at (tables[b, pos//ps], pos%ps) -- with the tree
+            # donated this is an in-place page write -- and attention
+            # reads the pool in place (null / never-written pages are
+            # skipped, stale page content only ever sits at masked
+            # positions).
             page_size = cache["k"].shape[1]
+            pos_b = jnp.broadcast_to(posn, (b,)) if posn.ndim == 0 \
+                else posn                                # (B,)
             rows = jnp.arange(b)
-            phys = table[rows, posn // page_size]        # (B,)
-            off = posn % page_size
+            phys = tables[rows, pos_b // page_size]      # (B,)
+            off = pos_b % page_size
             ck = cache["k"].at[phys, off].set(kk[:, 0].astype(
                 cache["k"].dtype))
             cv = cache["v"].at[phys, off].set(vv[:, 0].astype(
                 cache["v"].dtype))
-            new_cache = {"k": ck, "v": cv, "table": table}
-            ck = ck[table].reshape(b, -1, hkv, hd)       # gathered views
-            cv = cv[table].reshape(b, -1, hkv, hd)
-        elif cache is not None:
-            kk = kk.astype(cache["k"].dtype)
-            vv = vv.astype(cache["v"].dtype)
-            if posn.ndim == 0:
-                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kk,
-                                                         posn, 1)
-                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vv,
-                                                         posn, 1)
-            else:
-                rows = jnp.arange(b)
-                ck = cache["k"].at[rows, posn].set(kk[:, 0])
-                cv = cache["v"].at[rows, posn].set(vv[:, 0])
             new_cache = {"k": ck, "v": cv}
+            out = paged_decode_attention(q, ck, cv, tables, pos_b,
+                                         window=window, chunked=chunked,
+                                         cap=cfg.attn_softcap)
         else:
-            ck, cv = kk, vv
+            if cache is not None:
+                kk = kk.astype(cache["k"].dtype)
+                vv = vv.astype(cache["v"].dtype)
+                if posn.ndim == 0:
+                    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                             kk, posn, 1)
+                    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                             vv, posn, 1)
+                else:
+                    rows = jnp.arange(b)
+                    ck = cache["k"].at[rows, posn].set(kk[:, 0])
+                    cv = cache["v"].at[rows, posn].set(vv[:, 0])
+            else:
+                ck, cv = kk, vv
             new_cache = {"k": ck, "v": cv}
-        out = decode_attention(q, ck, cv, posn, window=window,
-                               chunked=chunked, cap=cfg.attn_softcap)
+            out = decode_attention(q, ck, cv, posn, window=window,
+                                   chunked=chunked, cap=cfg.attn_softcap)
     else:
         positions = jnp.arange(s)
         q = rope(q, positions, cfg.rope_theta)

@@ -8,7 +8,13 @@ KV/SSM buffers; it drives a :class:`CacheBackend`:
     append(handle)                                (one decoded token;
                                                    may allocate a page ->
                                                    raises PoolExhausted)
-    gather() -> caches pytree                     (view for decode_step)
+    gather() -> caches pytree                     (resident tree for
+                                                   decode_step; donated)
+    device_tables() -> (B, P) int32 | None        (paged: device-resident
+                                                   block tables, NOT
+                                                   donated; cached across
+                                                   steps, updated
+                                                   incrementally)
     commit(new_caches)                            (store the step's output)
     free(handle)                                  (retirement/preemption)
     can_admit(n_prompt) / memory_report()         (the admission contract)
@@ -30,8 +36,15 @@ Two implementations:
 
 The backends' contract is *token-for-token invariance*: the same request
 stream produces identical tokens on either backend (and solo vs.
-batched).  ``page_size`` must divide ``max_len`` so the paged gather view
-has exactly the dense width -- attention is then bitwise identical.
+batched).  ``page_size`` must divide ``max_len`` so a slot's pages cover
+exactly the dense position range.
+
+Decode reads the page pool IN PLACE: ``gather()`` returns the resident
+pool tree (no per-step view materialization, no per-step host->device
+table upload) and ``device_tables()`` the block tables, threaded through
+``lm.decode_step`` outside the donated cache tree.  On TPU attention
+runs the ``repro.kernels.paged_attention`` Pallas kernel over the pool;
+off-TPU the fallback view is bitwise identical to the dense row.
 """
 from __future__ import annotations
 
@@ -67,6 +80,35 @@ def _ins_slot(big, small, slot):
     small = small.astype(big.dtype)
     starts = (0, slot) + (0,) * (big.ndim - 2)
     return jax.lax.dynamic_update_slice(big, small, starts)
+
+
+# ---------------------------------------------------------------------------
+# incremental device-side block-table updates
+# ---------------------------------------------------------------------------
+#
+# The block tables live on device across decode steps (the decode step
+# reads them as a non-donated argument); page-allocation events patch
+# single entries via these jitted helpers instead of re-uploading the
+# host table every step.  TRACE_COUNTS increments once per *trace* (not
+# per call) -- the no-per-step-host-sync test asserts it stays flat while
+# decode runs.
+
+TRACE_COUNTS = collections.Counter()
+
+
+def _counting_jit(name: str, fn):
+    def traced(*args):
+        TRACE_COUNTS[name] += 1          # python side effect: trace-time only
+        return fn(*args)
+    return jax.jit(traced)
+
+
+_table_set_row = _counting_jit(
+    "table_set_row", lambda t, slot, row: t.at[slot].set(row))
+_table_set_entry = _counting_jit(
+    "table_set_entry", lambda t, slot, pg, phys: t.at[slot, pg].set(phys))
+_table_clear_row = _counting_jit(
+    "table_clear_row", lambda t, slot: t.at[slot].set(0))
 
 
 class CacheBackend:
@@ -105,6 +147,14 @@ class CacheBackend:
     def gather(self):
         """The caches pytree ``lm.decode_step`` consumes this step."""
         return self.caches
+
+    def device_tables(self):
+        """Paged backends: the device-resident (B, P) block tables the
+        decode step takes OUTSIDE the donated cache tree (None for
+        backends that need none).  The engine truncates them to the
+        live-page prefix INSIDE the jitted step (static width), so
+        decode attention scans only pages some slot actually wrote."""
+        return None
 
     def commit(self, new_caches):
         """Store the (donated-through) cache tree a decode step returned."""
@@ -173,6 +223,7 @@ class DenseCache(CacheBackend):
             "peak_cache_bytes": self._bytes,   # dense pins everything
             "live_tokens": self._live_tokens,
             "peak_live_tokens": self._peak_tokens,
+            "gather_transient_bytes": 0,       # gather() is the resident tree
         }
 
     def reset(self):
@@ -216,8 +267,14 @@ class PagedCache(CacheBackend):
         self.caches = lm.init_paged_caches(cfg, max_batch, self.page_size,
                                            self.n_pages)
         self._has_kv = any("kv" in c for c in self.caches.values())
-        self._nsb = lm.n_superblocks(cfg)
         self._table = np.zeros((max_batch, self.table_width), np.int32)
+        # device-resident copy of the block tables: uploaded once here,
+        # then patched incrementally on admission / page allocation /
+        # free -- decode steps reuse the SAME device array (no per-step
+        # host->device sync; `table_host_uploads` counts full-row
+        # uploads, which only happen at admission frequency)
+        self._table_dev = jnp.asarray(self._table)
+        self.table_host_uploads = 0
         self._free = collections.deque(range(1, self.n_pages + 1))
         self._handles: dict[int, CacheHandle] = {}
         self._peak_pages = 0
@@ -297,6 +354,9 @@ class PagedCache(CacheBackend):
                         pages=[self._free.popleft() for _ in range(n)])
         self._table[slot] = 0
         self._table[slot, :n] = h.pages
+        self._table_dev = _table_set_row(self._table_dev, slot,
+                                         jnp.asarray(self._table[slot]))
+        self.table_host_uploads += 1
         self._handles[slot] = h
         self._note_usage()
         return h
@@ -315,6 +375,8 @@ class PagedCache(CacheBackend):
                 phys = self._free.popleft()
                 handle.pages.append(phys)
                 self._table[handle.slot, pg] = phys
+                self._table_dev = _table_set_entry(self._table_dev,
+                                                   handle.slot, pg, phys)
                 self._note_usage()
         handle.n_tokens += 1
 
@@ -322,6 +384,7 @@ class PagedCache(CacheBackend):
         self._free.extend(handle.pages)
         handle.pages = []
         self._table[handle.slot] = 0
+        self._table_dev = _table_clear_row(self._table_dev, handle.slot)
         self._handles.pop(handle.slot, None)
 
     def _note_usage(self):
@@ -339,32 +402,11 @@ class PagedCache(CacheBackend):
                                    jnp.asarray(handle.slot, jnp.int32),
                                    page_ids)
 
-    def gather(self):
-        # fresh device tables every step: the gathered tree is donated
-        # into the decode step, so a cached device array would die with it
-        table = jnp.asarray(np.broadcast_to(
-            self._table, (self._nsb,) + self._table.shape))
-        out = {}
-        for lname, c in self.caches.items():
-            nc = {}
-            if "kv" in c:
-                nc["kv"] = {"k": c["kv"]["k"], "v": c["kv"]["v"],
-                            "table": table}
-            if "mamba" in c:
-                nc["mamba"] = c["mamba"]
-            out[lname] = nc
-        return out
-
-    def commit(self, new_caches):
-        out = {}
-        for lname, c in new_caches.items():
-            nc = {}
-            if "kv" in c:
-                nc["kv"] = {"k": c["kv"]["k"], "v": c["kv"]["v"]}
-            if "mamba" in c:
-                nc["mamba"] = c["mamba"]
-            out[lname] = nc
-        self.caches = out
+    def device_tables(self):
+        # the SAME device array across steps (it rides outside the
+        # donated cache tree); only admission / page-boundary / free
+        # events replace it, via the incremental jitted updaters above
+        return self._table_dev
 
     # -- reporting ----------------------------------------------------------
     def memory_report(self) -> dict:
@@ -386,12 +428,21 @@ class PagedCache(CacheBackend):
             "pool_bytes": (self.n_pages + 1) * self.bytes_per_page
             + self.max_batch * self.ssm_slot_bytes,
             "dense_equivalent_bytes": self.dense_equivalent_bytes,
+            # decode reads the pool in place (paged-attention kernel /
+            # bitwise-equivalent fallback view); no dense-width
+            # (max_batch, max_len) KV transient is materialized per step
+            "gather_transient_bytes": 0,
+            "table_bytes": int(self._table_dev.size
+                               * self._table_dev.dtype.itemsize),
+            "table_host_uploads": self.table_host_uploads,
         }
 
     def reset(self):
         for h in list(self._handles.values()):
             self.free(h)
         self._table[:] = 0
+        self._table_dev = jnp.asarray(self._table)
+        self.table_host_uploads = 0
         self._free = collections.deque(range(1, self.n_pages + 1))
         self._peak_pages = 0
 

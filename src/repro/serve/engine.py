@@ -30,6 +30,7 @@ that.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -179,38 +180,59 @@ class InferenceServer:
             steps.make_bucketed_prefill_step(cfg))
         # donate the cache tree: decode updates it in place instead of
         # copying the full pool buffers per token (no-op on CPU, where
-        # XLA ignores donation)
+        # XLA ignores donation).  The paged block tables ride OUTSIDE
+        # the donated tree so the backend's device copy survives across
+        # steps (None for the dense backend); `width` is the STATIC
+        # live-page prefix this step attends over -- sliced inside the
+        # jit, so it costs one compile per distinct width (bounded by
+        # table_width) instead of any per-step work, and attention
+        # scans only pages some slot actually wrote instead of max_len.
+        def _live_tables(tables, width):
+            if tables is None or width is None \
+                    or width >= tables.shape[1]:
+                return tables
+            return jax.lax.slice_in_dim(tables, 0, width, axis=1)
+
         self._decode = jax.jit(
-            lambda p, t, c, pos: lm.decode_step(cfg, p, t, c, pos),
-            donate_argnums=(2,))
+            lambda p, t, c, tbl, pos, width: lm.decode_step(
+                cfg, p, t, c, pos, tables=_live_tables(tbl, width)),
+            donate_argnums=(2,), static_argnums=(5,))
 
         vocab = cfg.vocab
 
-        def decode_sample(params, tokens, caches, pos, temps, topks,
-                          seeds, uids, tidx):
+        def decode_sample(params, tokens, caches, tables, pos, temps,
+                          topks, seeds, uids, tidx, need_top_k, width):
             """One decode step + on-device batched sampling: only the
             (B,) sampled ids cross back to the host."""
-            logits, caches = lm.decode_step(cfg, params, tokens, caches,
-                                            pos)
+            logits, caches = lm.decode_step(
+                cfg, params, tokens, caches, pos,
+                tables=_live_tables(tables, width))
             next_tok = sample_tokens_device(
-                logits[:, -1, :vocab], temps, topks, seeds, uids, tidx)
+                logits[:, -1, :vocab], temps, topks, seeds, uids, tidx,
+                need_top_k=need_top_k)
             return next_tok, caches
 
-        self._decode_sample = jax.jit(decode_sample, donate_argnums=(2,))
+        self._decode_sample = jax.jit(decode_sample, donate_argnums=(2,),
+                                      static_argnums=(10, 11))
 
-        def decode_greedy(params, tokens, caches, pos):
+        def decode_greedy(params, tokens, caches, tables, pos, width):
             """All-greedy fast path: plain argmax, no sort/Gumbel work."""
-            logits, caches = lm.decode_step(cfg, params, tokens, caches,
-                                            pos)
+            logits, caches = lm.decode_step(
+                cfg, params, tokens, caches, pos,
+                tables=_live_tables(tables, width))
             next_tok = jnp.argmax(
                 logits[:, -1, :vocab].astype(jnp.float32), axis=-1)
             return next_tok.astype(jnp.int32), caches
 
-        self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(2,))
+        self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(2,),
+                                      static_argnums=(5,))
         self._sample = jax.jit(
-            lambda lg, temps, topks, seeds, uids, tidx:
+            lambda lg, temps, topks, seeds, uids, tidx, need_top_k:
             sample_tokens_device(lg[:, :vocab], temps, topks, seeds,
-                                 uids, tidx))
+                                 uids, tidx, need_top_k=need_top_k),
+            static_argnums=(6,))
+        # per-step decode latency split: [gather_s, step_s, n_steps]
+        self._step_timing = [0.0, 0.0, 0]
 
     # ------------------------------------------------------- sampling glue
     def _sample_first(self, logits_last, st_req, uid, tidx, rng):
@@ -224,7 +246,8 @@ class InferenceServer:
                 jnp.asarray([sp.top_k], jnp.int32),
                 jnp.asarray([sp.seed], jnp.int32),
                 jnp.asarray([uid], jnp.int32),
-                jnp.asarray([tidx], jnp.int32))
+                jnp.asarray([tidx], jnp.int32),
+                0 < sp.top_k < self.cfg.vocab)
             return int(np.asarray(tok)[0])
         row = np.asarray(logits_last.astype(jnp.float32))[0]
         return sample_token(row[: self.cfg.vocab], st_req.sampling, rng)
@@ -242,6 +265,7 @@ class InferenceServer:
         sched = Scheduler(self.max_batch, self.max_len)
         backend = self.backend
         backend.reset()
+        self._step_timing = [0.0, 0.0, 0]
         for r in requests:
             backend.check_feasible(np.asarray(r.prompt).size,
                                    r.sampling.max_tokens)
@@ -323,10 +347,18 @@ class InferenceServer:
                     self._append_or_preempt(sched, backend, st)
             now += 1
 
+        gather_s, step_s, timed = self._step_timing
         self.stats = {"decode_steps": n_steps, "admitted": n_admitted,
                       "preemptions": sched.preemptions,
                       "generated": sum(len(s.out)
                                        for s in sched.finished.values()),
+                      # per-step decode latency split: assembling the
+                      # step's inputs from the backend (gather + device
+                      # tables) vs. running the jitted step itself
+                      "gather_us_per_step": round(
+                          gather_s / timed * 1e6, 2) if timed else 0.0,
+                      "step_us_per_step": round(
+                          step_s / timed * 1e6, 2) if timed else 0.0,
                       "memory": backend.memory_report()}
         return {uid: np.asarray(s.out, np.int32)
                 for uid, s in sched.finished.items()}
@@ -348,6 +380,24 @@ class InferenceServer:
         backend.insert(handle, pcaches)
         return logits[:, -1, :]
 
+    def _live_width(self, active):
+        """Live block-table width for this step: enough pages to cover
+        the highest decode position in the batch.  Pages past it were
+        never written by ANY slot -- the paged attention then scans the
+        live prefix instead of the full ``max_len`` width (dense
+        attention always pays the full width).  Each distinct width is
+        one extra compile of the decode step, so widths are bucketed to
+        at most 8 values per table (exact below 8 pages): a realistic
+        max_len/page_size of 128 pages still compiles <= 8 variants,
+        each at most table_width/8 pages wider than needed.
+        """
+        if self.backend.name != "paged":
+            return None
+        tw = self.backend.table_width
+        need = max(st.pos for st in active) // self.backend.page_size + 1
+        step = max(1, tw // 8)
+        return min(tw, -(-need // step) * step)
+
     def _decode_active(self, active) -> dict:
         """One batched decode step; returns {slot: sampled token id}."""
         tokens = np.zeros((self.max_batch, 1), np.int32)
@@ -355,46 +405,64 @@ class InferenceServer:
         for st in active:
             tokens[st.slot, 0] = st.last_token
             pos[st.slot] = st.pos
+        t0 = time.perf_counter()
         caches = self.backend.gather()
-        if self.sample_on_device and all(
-                st.request.sampling.greedy for st in active):
-            # every active row is greedy: argmax decode, none of the
-            # sort/Gumbel machinery (bit-identical to the full sampler)
-            next_tok, caches = self._decode_greedy(
+        tables = self.backend.device_tables()
+        width = self._live_width(active)
+        t1 = time.perf_counter()
+        step_end = None      # host-sampling path stamps the step's end
+        try:                 # itself, excluding its python sample loop
+            if self.sample_on_device and all(
+                    st.request.sampling.greedy for st in active):
+                # every active row is greedy: argmax decode, none of the
+                # sort/Gumbel machinery (bit-identical to the full sampler)
+                next_tok, caches = self._decode_greedy(
+                    self.params, {"tokens": jnp.asarray(tokens)}, caches,
+                    tables, jnp.asarray(pos), width)
+                self.backend.commit(caches)
+                ids = np.asarray(next_tok)
+                return {st.slot: int(ids[st.slot]) for st in active}
+            if self.sample_on_device:
+                temps = np.zeros(self.max_batch, np.float32)
+                topks = np.zeros(self.max_batch, np.int32)
+                seeds = np.zeros(self.max_batch, np.int32)
+                uids = np.zeros(self.max_batch, np.int32)
+                tidx = np.zeros(self.max_batch, np.int32)
+                for st in active:
+                    sp = st.request.sampling
+                    temps[st.slot] = sp.temperature
+                    topks[st.slot] = sp.top_k
+                    seeds[st.slot] = sp.seed
+                    uids[st.slot] = st.request.uid
+                    tidx[st.slot] = len(st.out)
+                # trace-time flag: rows that truncate need the full-vocab
+                # sort; a pure-temperature batch skips it entirely
+                need_top_k = any(0 < st.request.sampling.top_k
+                                 < self.cfg.vocab for st in active)
+                next_tok, caches = self._decode_sample(
+                    self.params, {"tokens": jnp.asarray(tokens)}, caches,
+                    tables, jnp.asarray(pos), jnp.asarray(temps),
+                    jnp.asarray(topks), jnp.asarray(seeds),
+                    jnp.asarray(uids), jnp.asarray(tidx), need_top_k,
+                    width)
+                self.backend.commit(caches)
+                ids = np.asarray(next_tok)
+                return {st.slot: int(ids[st.slot]) for st in active}
+            logits, caches = self._decode(
                 self.params, {"tokens": jnp.asarray(tokens)}, caches,
-                jnp.asarray(pos))
+                tables, jnp.asarray(pos), width)
             self.backend.commit(caches)
-            ids = np.asarray(next_tok)
-            return {st.slot: int(ids[st.slot]) for st in active}
-        if self.sample_on_device:
-            temps = np.zeros(self.max_batch, np.float32)
-            topks = np.zeros(self.max_batch, np.int32)
-            seeds = np.zeros(self.max_batch, np.int32)
-            uids = np.zeros(self.max_batch, np.int32)
-            tidx = np.zeros(self.max_batch, np.int32)
-            for st in active:
-                sp = st.request.sampling
-                temps[st.slot] = sp.temperature
-                topks[st.slot] = sp.top_k
-                seeds[st.slot] = sp.seed
-                uids[st.slot] = st.request.uid
-                tidx[st.slot] = len(st.out)
-            next_tok, caches = self._decode_sample(
-                self.params, {"tokens": jnp.asarray(tokens)}, caches,
-                jnp.asarray(pos), jnp.asarray(temps), jnp.asarray(topks),
-                jnp.asarray(seeds), jnp.asarray(uids), jnp.asarray(tidx))
-            self.backend.commit(caches)
-            ids = np.asarray(next_tok)
-            return {st.slot: int(ids[st.slot]) for st in active}
-        logits, caches = self._decode(
-            self.params, {"tokens": jnp.asarray(tokens)}, caches,
-            jnp.asarray(pos))
-        self.backend.commit(caches)
-        rows = np.asarray(logits.astype(jnp.float32))[:, -1,
-                                                      : self.cfg.vocab]
-        return {st.slot: sample_token(rows[st.slot],
-                                      st.request.sampling, st.rng)
-                for st in active}
+            rows = np.asarray(logits.astype(jnp.float32))[:, -1,
+                                                          : self.cfg.vocab]
+            step_end = time.perf_counter()   # np.asarray synced the step
+            return {st.slot: sample_token(rows[st.slot],
+                                          st.request.sampling, st.rng)
+                    for st in active}
+        finally:
+            t2 = step_end if step_end is not None else time.perf_counter()
+            self._step_timing[0] += t1 - t0
+            self._step_timing[1] += t2 - t1
+            self._step_timing[2] += 1
 
     def _append_or_preempt(self, sched, backend, st):
         """Back the request's next cache write with storage; on pool

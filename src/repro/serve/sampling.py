@@ -56,7 +56,8 @@ class SamplingParams:
 
 def sample_tokens_device(logits: jax.Array, temperature: jax.Array,
                          top_k: jax.Array, seed: jax.Array, uid: jax.Array,
-                         token_index: jax.Array) -> jax.Array:
+                         token_index: jax.Array,
+                         need_top_k: bool = True) -> jax.Array:
     """Batched on-device sampling: (B, V) logits -> (B,) token ids.
 
     All per-row params are (B,) arrays.  temperature == 0 rows are greedy
@@ -70,6 +71,13 @@ def sample_tokens_device(logits: jax.Array, temperature: jax.Array,
     per-row k threshold comes from the full ``lax.top_k`` descending sort
     + a dynamic take, the draw from argmax(z + Gumbel) over the truncated
     support.
+
+    ``need_top_k`` is a trace-time flag: pass False when NO row truncates
+    (every ``top_k`` is <= 0 or >= V) and the full-vocab descending sort
+    is skipped entirely -- pure-temperature batches then pay only the
+    Gumbel draw.  Truncating rows with ``need_top_k=False`` would be
+    silently un-truncated; the caller (``InferenceServer``) derives the
+    flag from the active requests' SamplingParams.
     """
     logits = logits.astype(jnp.float32)
     b, v = logits.shape
@@ -77,11 +85,12 @@ def sample_tokens_device(logits: jax.Array, temperature: jax.Array,
 
     safe_t = jnp.where(temperature > 0, temperature, 1.0)
     z = logits / safe_t[:, None]
-    svals, _ = jax.lax.top_k(z, v)                     # descending sort
-    kth_idx = jnp.clip(top_k - 1, 0, v - 1)
-    kth = jnp.take_along_axis(svals, kth_idx[:, None], axis=-1)
-    keep = (top_k <= 0)[:, None] | (z >= kth)
-    z = jnp.where(keep, z, -jnp.inf)
+    if need_top_k:
+        svals, _ = jax.lax.top_k(z, v)                 # descending sort
+        kth_idx = jnp.clip(top_k - 1, 0, v - 1)
+        kth = jnp.take_along_axis(svals, kth_idx[:, None], axis=-1)
+        keep = (top_k <= 0)[:, None] | (z >= kth)
+        z = jnp.where(keep, z, -jnp.inf)
 
     def row_gumbel(s, u, t):
         key = jax.random.fold_in(jax.random.fold_in(

@@ -2,17 +2,22 @@
 memory-aware admission contract (pool-exhaustion queuing, preemption
 requeue ordering), page free-on-retire leak checks, paged-vs-dense
 token-for-token parity across mixed prompt lengths (float + quantized,
-greedy + seeded device sampling, streaming + preemption), and the
-on-device sampling path vs. the host fallback."""
+greedy + seeded device sampling, streaming + preemption, gathered-view
+AND Pallas-kernel attention impls), the device-resident block tables
+(no per-step host sync), and the on-device sampling path vs. the host
+fallback."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import registry
+from repro.kernels.paged_attention import ops as paged_ops
 from repro.models import lm
 from repro.serve import cache as cache_mod
 from repro.serve import engine
-from repro.serve.sampling import SamplingParams, make_rng
+from repro.serve.sampling import SamplingParams, make_rng, \
+    sample_tokens_device
 from repro.serve.scheduler import PendingEntry, Request, Scheduler, \
     SlotState
 
@@ -313,6 +318,101 @@ class TestPagedDenseParity:
             np.testing.assert_array_equal(ref[i], out[i])
 
 
+class TestPagedKernelParity:
+    """The Pallas paged-attention kernel (interpret mode on CPU) must
+    reproduce the dense backend's token streams exactly -- the PR 3
+    invariant survives the in-place pool read."""
+
+    def test_kernel_impl_matches_dense_tokens(self, llama):
+        cfg, params = llama
+        sp_greedy = SamplingParams(max_tokens=4)
+        sp_seeded = SamplingParams(temperature=0.8, top_k=7, max_tokens=4,
+                                   seed=3)
+        lens = (5, 11)
+        dense = engine.InferenceServer(cfg, params, max_len=16,
+                                       max_batch=2)
+        ref_g = dense.serve(_reqs(cfg, lens, sp_greedy, seed=1))
+        ref_s = dense.serve(_reqs(cfg, lens, sp_seeded, seed=1))
+        with paged_ops.force_impl("kernel"):
+            # fresh server: its decode step traces (and therefore bakes
+            # in the forced impl) on first use inside this block
+            paged = engine.InferenceServer(cfg, params, max_len=16,
+                                           max_batch=2, cache="paged",
+                                           page_size=8)
+            out_g = paged.serve(_reqs(cfg, lens, sp_greedy, seed=1))
+            out_s = paged.serve(_reqs(cfg, lens, sp_seeded, seed=1))
+        for i in range(len(lens)):
+            np.testing.assert_array_equal(ref_g[i], out_g[i])
+            np.testing.assert_array_equal(ref_s[i], out_s[i])
+
+    def test_mirror_ref_impl_matches_dense_tokens(self, llama):
+        cfg, params = llama
+        sp = SamplingParams(max_tokens=4)
+        lens = (5, 11)
+        dense = engine.InferenceServer(cfg, params, max_len=16,
+                                       max_batch=2)
+        ref = dense.serve(_reqs(cfg, lens, sp, seed=1))
+        with paged_ops.force_impl("ref"):
+            paged = engine.InferenceServer(cfg, params, max_len=16,
+                                           max_batch=2, cache="paged",
+                                           page_size=8)
+            out = paged.serve(_reqs(cfg, lens, sp, seed=1))
+        for i in range(len(lens)):
+            np.testing.assert_array_equal(ref[i], out[i])
+
+
+class TestDeviceTables:
+    """The block tables live on device across steps; decode must not
+    re-upload or re-trace anything per step."""
+
+    def test_no_per_step_host_sync(self, llama):
+        cfg, _ = llama
+        b = cache_mod.PagedCache(cfg, max_batch=2, max_len=32,
+                                 page_size=8, n_pages=6)
+        h = b.alloc(uid=0, slot=0, n_prompt=5)
+        uploads0 = b.table_host_uploads
+        t0 = b.device_tables()
+        # steady-state decode inside a page: the SAME device array is
+        # handed out every step -- no upload, no update, no new trace
+        traces0 = dict(cache_mod.TRACE_COUNTS)
+        for _ in range(2):
+            b.append(h)                      # pos 6, 7: within page 0
+            assert b.device_tables() is t0
+        assert b.table_host_uploads == uploads0
+        assert dict(cache_mod.TRACE_COUNTS) == traces0
+        # page-boundary crossing patches ONE entry via the jitted
+        # updater (no full-table host upload)
+        b.append(h)                          # next write pos 8: new page
+        t1 = b.device_tables()
+        assert t1 is not t0
+        assert b.table_host_uploads == uploads0
+        np.testing.assert_array_equal(np.asarray(t1), b._table)
+        # a second crossing must reuse the compiled updater (no retrace)
+        entry_traces = cache_mod.TRACE_COUNTS["table_set_entry"]
+        for _ in range(8):
+            b.append(h)                      # crosses into page 2 at 16
+        assert cache_mod.TRACE_COUNTS["table_set_entry"] == entry_traces
+        np.testing.assert_array_equal(np.asarray(b.device_tables()),
+                                      b._table)
+        b.free(h)
+        np.testing.assert_array_equal(np.asarray(b.device_tables()), 0)
+
+    def test_tables_track_alloc_and_free(self, llama):
+        cfg, _ = llama
+        b = cache_mod.PagedCache(cfg, max_batch=3, max_len=32,
+                                 page_size=8, n_pages=9)
+        h0 = b.alloc(uid=0, slot=0, n_prompt=17)
+        h1 = b.alloc(uid=1, slot=2, n_prompt=3)
+        np.testing.assert_array_equal(np.asarray(b.device_tables()),
+                                      b._table)
+        b.free(h0)
+        np.testing.assert_array_equal(np.asarray(b.device_tables()),
+                                      b._table)
+        assert np.asarray(b.device_tables())[0].sum() == 0
+        assert np.asarray(b.device_tables())[2].sum() > 0
+        b.free(h1)
+
+
 # ---------------------------------------------------------------------------
 # on-device sampling vs. the host fallback
 # ---------------------------------------------------------------------------
@@ -352,3 +452,39 @@ class TestOnDeviceSampling:
         r2 = srv.serve(_reqs(cfg, (6,), sp2, seed=6))
         np.testing.assert_array_equal(r1[0], r1b[0])   # deterministic
         assert not np.array_equal(r1[0], r2[0])        # seed matters
+
+    def test_top_k_sort_skip_is_exact(self):
+        """need_top_k=False (no row truncates) must draw the identical
+        tokens as the sorting path: pure-temperature and top_k >= vocab
+        rows keep the whole support either way."""
+        rng = np.random.default_rng(0)
+        v = 64
+        logits = jnp.asarray(rng.normal(size=(3, v)).astype(np.float32))
+        temps = jnp.asarray([0.9, 0.0, 1.7], jnp.float32)
+        seeds = jnp.asarray([1, 2, 3], jnp.int32)
+        uids = jnp.asarray([10, 11, 12], jnp.int32)
+        tidx = jnp.asarray([0, 5, 9], jnp.int32)
+        for topks in ([0, 0, 0], [v, 0, v + 7]):
+            tk = jnp.asarray(topks, jnp.int32)
+            with_sort = sample_tokens_device(logits, temps, tk, seeds,
+                                             uids, tidx, need_top_k=True)
+            skipped = sample_tokens_device(logits, temps, tk, seeds,
+                                           uids, tidx, need_top_k=False)
+            np.testing.assert_array_equal(np.asarray(with_sort),
+                                          np.asarray(skipped))
+
+    def test_pure_temperature_serve_uses_skip_path(self, llama):
+        """End-to-end: a pure-temperature batch (top_k=0) is served and
+        stays deterministic; a later truncating batch on the same server
+        still truncates (the static flag recompiles, not corrupts)."""
+        cfg, params = llama
+        srv = engine.InferenceServer(cfg, params, max_len=48, max_batch=2)
+        sp = SamplingParams(temperature=1.1, max_tokens=6, seed=2)
+        a = srv.serve(_reqs(cfg, (6, 9), sp, seed=8))
+        b = srv.serve(_reqs(cfg, (6, 9), sp, seed=8))
+        for i in range(2):
+            np.testing.assert_array_equal(a[i], b[i])
+        spk = SamplingParams(temperature=1.1, top_k=2, max_tokens=6,
+                             seed=2)
+        c = srv.serve(_reqs(cfg, (6, 9), spk, seed=8))
+        assert not all(np.array_equal(a[i], c[i]) for i in range(2))
