@@ -35,11 +35,12 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import lm
+from repro.obs import Observability, percentiles
 from repro.serve import engine
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 def make_requests(cfg, n, prompt_lens, tokens, gap):
@@ -90,6 +91,37 @@ def _row_from(stats, name, cache, wall, out, plan):
     return row, out
 
 
+def _add_latency_split(row, server, requests, wall, repeats=3):
+    """Per-request latency split from the request tracer.
+
+    Attaches a fresh Observability bundle to the already-warmed server
+    (host-side only: no recompiles -- ``attach_obs`` never touches the
+    jitted closures), re-runs the workload best-of-N, and folds the
+    tracer's TTFT / per-token percentiles into the row.  The traced wall
+    vs. the untraced ``wall`` is the measured obs overhead, reported as
+    ``obs_overhead_pct`` per the acceptance criterion that the default
+    (obs-off) path stays at baseline while the obs-on cost is known.
+    """
+    obs = Observability()
+    server.attach_obs(obs)
+    try:
+        traced_wall = float("inf")
+        for _ in range(repeats):
+            t0 = time.time()
+            server.serve(requests)
+            traced_wall = min(traced_wall, time.time() - t0)
+        ttft = percentiles(obs.tracer.ttfts())
+        tok = percentiles(obs.tracer.token_latencies())
+        for p in ("p50", "p95", "p99"):
+            row[f"ttft_ms_{p}"] = round(ttft[p] * 1e3, 3)
+            row[f"token_ms_{p}"] = round(tok[p] * 1e3, 3)
+        row["obs_overhead_pct"] = round(
+            (traced_wall - wall) / wall * 100.0, 2)
+    finally:
+        server.attach_obs(None)
+    return row
+
+
 def bench_variant(name, cfg, params, plan, requests, max_len, max_batch,
                   repeats=3):
     """Single dense-backend variant (paged rows go through
@@ -104,7 +136,9 @@ def bench_variant(name, cfg, params, plan, requests, max_len, max_batch,
         w = time.time() - t0
         if w < wall:
             wall, stats = w, server.stats
-    return _row_from(stats, name, "dense", wall, out, plan)
+    row, out = _row_from(stats, name, "dense", wall, out, plan)
+    _add_latency_split(row, server, requests, wall)
+    return row, out
 
 
 def bench_pair(name, cfg, params, plan, requests, max_len, max_batch,
@@ -144,6 +178,8 @@ def bench_pair(name, cfg, params, plan, requests, max_len, max_batch,
     row_d, _ = _row_from(stats_d, name, "dense", wall_d, out_d, plan)
     row_p, _ = _row_from(stats_p, f"{name}-paged", "paged", wall_p,
                          out_p, plan)
+    _add_latency_split(row_d, dense, requests, wall_d)
+    _add_latency_split(row_p, paged, requests, wall_p)
     return row_d, row_p
 
 

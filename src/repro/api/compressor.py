@@ -96,12 +96,22 @@ class Compressor:
 
     # ------------------------------------------------------------------ run
     def run(self, phases, hooks=(), init_folded=None, checkpoint=None,
-            checkpoint_every: int = 50) -> CompressionResult:
+            checkpoint_every: int = 50,
+            registry=None) -> CompressionResult:
+        """``registry`` (a :class:`repro.obs.MetricsRegistry`) routes the
+        phases' step metrics and timings into the shared observability
+        namespace -- the same registry the serving stack writes into.
+        Hook-logged step metrics become ``compress_step_value`` /
+        ``compress_step_points_total{phase,metric}`` (idempotent under
+        checkpoint resume when the same registry is reused), and each
+        phase's wall time lands in ``compress_phase_seconds{phase}``."""
         t_start = time.time()
         state = phases_mod.CompressionState(
             graph=self.graph, spec=self.spec, pw=self.pw, px=self.px,
             batch=self.batch, seed=self.seed)
         state.folded = init_folded
+        if registry is not None and registry.enabled:
+            state.registry = registry
         phases = list(phases)
         hooks = list(hooks)
 
@@ -129,6 +139,12 @@ class Compressor:
             key = f"{phase.name}_s"
             state.timings[key] = state.timings.get(key, 0.0) \
                 + time.time() - t0
+            if state.registry is not None:
+                state.registry.gauge(
+                    "compress_phase_seconds",
+                    "Cumulative wall time spent in a compression phase",
+                    labels=("phase",)).set(state.timings[key],
+                                           phase=phase.name)
             for h in phase_hooks:
                 h.on_phase_end(phase, state)
         if checkpoint is not None:

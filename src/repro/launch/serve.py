@@ -71,6 +71,12 @@ def main():
     ap.add_argument("--host-sampling", action="store_true",
                     help="sample on the host per token instead of the "
                          "on-device batched gumbel top-k path")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable observability and write the metrics "
+                         "registry in Prometheus text format to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable observability and write the per-request "
+                         "lifecycle trace as JSON lines to PATH")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch)
@@ -79,13 +85,18 @@ def main():
     if args.plan is not None:
         plan = _load_plan(args.plan, cfg, params)
         print(f"[serve] quantized decode: {plan.summary()}")
+    obs = None
+    if args.metrics or args.trace:
+        from repro.obs import Observability
+        obs = Observability()
     server = engine.InferenceServer(cfg, params, plan=plan,
                                     max_len=args.max_len,
                                     max_batch=args.max_batch,
                                     cache=args.cache,
                                     page_size=args.page_size,
                                     pages=args.pages,
-                                    sample_on_device=not args.host_sampling)
+                                    sample_on_device=not args.host_sampling,
+                                    obs=obs)
 
     rng = np.random.default_rng(0)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
@@ -120,6 +131,30 @@ def main():
     for i in range(min(args.requests, 4)):
         print(f"  req{i}: prompt={[int(t) for t in reqs[i].prompt[:6]]}... "
               f"completion={[int(t) for t in out[i][:8]]}")
+
+    if obs is not None:
+        from repro.obs import write_prometheus, write_trace
+        summary = server.metrics_snapshot().get("summary", {})
+        if summary:
+            ttft = summary["ttft_s"]
+            tok = summary["token_latency_s"]
+            fmt = lambda v: "n/a" if v is None else f"{v * 1e3:.1f}ms"
+            print(f"[obs] ttft p50={fmt(ttft['p50'])} "
+                  f"p95={fmt(ttft['p95'])} p99={fmt(ttft['p99'])} | "
+                  f"token p50={fmt(tok['p50'])} p95={fmt(tok['p95'])} "
+                  f"p99={fmt(tok['p99'])} | "
+                  f"preemptions={summary['preemptions']} "
+                  f"pages_hwm={summary['pages_held_hwm']}")
+            widths = summary.get("decode_compiles_per_width")
+            if widths:
+                print(f"[obs] decode compiles per width: {widths}")
+        if args.metrics:
+            write_prometheus(obs.registry, args.metrics)
+            print(f"[obs] metrics -> {args.metrics}")
+        if args.trace:
+            write_trace(obs.tracer, args.trace)
+            print(f"[obs] trace -> {args.trace} "
+                  f"({len(obs.tracer.events)} events)")
 
 
 if __name__ == "__main__":

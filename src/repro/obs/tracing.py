@@ -1,0 +1,219 @@
+"""Request lifecycle tracer for the serving engine.
+
+Each request moving through :class:`repro.serve.engine.InferenceServer`
+leaves a trail of :class:`TraceEvent` records::
+
+    enqueued -> admitted -> prefilled -> first_token -> decode(n)*
+             -> (preempted -> admitted -> prefilled -> decode(n)* )*
+             -> finished
+
+Timestamps are monotonic (``time.perf_counter``) relative to the start
+of the serve run, so event deltas are meaningful even across wall-clock
+adjustments.  ``pages_held`` snapshots the cache pages a request holds
+at the transition, which makes memory pressure attributable per request.
+
+The tracer doubles as the feed for the latency histograms: when a
+registry is attached, ``first_token`` observes ``serve_ttft_seconds``
+and every token-bearing event observes ``serve_token_latency_seconds``,
+so histogram counts reconcile exactly with the engine's token totals.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+EVENT_KINDS = ("enqueued", "admitted", "prefilled", "first_token",
+               "decode", "preempted", "finished")
+
+
+@dataclass
+class TraceEvent:
+    """One lifecycle transition for one request."""
+
+    uid: int
+    kind: str
+    t: float                       # seconds since tracer start (monotonic)
+    n: int | None = None           # tokens: prompt size / generated so far
+    pages_held: int | None = None  # cache pages held after the transition
+    slot: int | None = None        # batch slot while resident
+    extra: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        out = {"uid": self.uid, "kind": self.kind, "t": self.t}
+        for k in ("n", "pages_held", "slot"):
+            v = getattr(self, k)
+            if v is not None:
+                out[k] = v
+        out.update(self.extra)
+        return out
+
+
+class RequestTracer:
+    """Accumulates lifecycle events for one serve run.
+
+    ``start()`` resets the event log and the time origin; the attached
+    registry (if any) is *not* reset, so metrics stay cumulative across
+    runs while the trace is per-run.
+    """
+
+    def __init__(self, registry=None):
+        self.registry = registry if (registry is not None
+                                     and registry.enabled) else None
+        self.events: list[TraceEvent] = []
+        self._t0 = time.perf_counter()
+        self._enq_t: dict[int, float] = {}
+        self._last_token_t: dict[int, float] = {}
+
+    def start(self):
+        self.events = []
+        self._t0 = time.perf_counter()
+        self._enq_t = {}
+        self._last_token_t = {}
+
+    # ------------------------------------------------------------ recording
+    def event(self, uid: int, kind: str, *, n=None, pages_held=None,
+              slot=None, **extra):
+        if kind not in EVENT_KINDS:
+            raise ValueError(f"unknown trace event kind {kind!r}")
+        t = time.perf_counter() - self._t0
+        ev = TraceEvent(int(uid), kind, t,
+                        n=None if n is None else int(n),
+                        pages_held=(None if pages_held is None
+                                    else int(pages_held)),
+                        slot=None if slot is None else int(slot),
+                        extra=extra)
+        self.events.append(ev)
+
+        if kind == "enqueued":
+            self._enq_t[ev.uid] = t
+            self._last_token_t.pop(ev.uid, None)
+
+        reg = self.registry
+        if reg is not None:
+            reg.counter("serve_trace_events_total",
+                        "Lifecycle trace events recorded",
+                        labels=("kind",)).inc(kind=kind)
+        if kind in ("first_token", "decode"):
+            # Every generated token passes through exactly one of these
+            # events, so serve_token_latency_seconds' count equals the
+            # engine's generated-token total.  The first token's latency
+            # is measured from enqueue, later ones from the previous
+            # token (including time spent preempted).
+            prev = self._last_token_t.get(
+                ev.uid, self._enq_t.get(ev.uid, t))
+            if reg is not None:
+                if kind == "first_token":
+                    reg.histogram(
+                        "serve_ttft_seconds",
+                        "Time from enqueue to first generated token"
+                    ).observe(t - self._enq_t.get(ev.uid, t))
+                reg.histogram(
+                    "serve_token_latency_seconds",
+                    "Per-generated-token latency (first token measured "
+                    "from enqueue)").observe(t - prev)
+                reg.counter("serve_tokens_total",
+                            "Tokens generated across all requests").inc()
+            self._last_token_t[ev.uid] = t
+        return ev
+
+    # ------------------------------------------------------------ accessors
+    def uids(self) -> list:
+        seen: dict = {}
+        for ev in self.events:
+            seen.setdefault(ev.uid, None)
+        return list(seen)
+
+    def events_for(self, uid: int) -> list:
+        return [ev for ev in self.events if ev.uid == int(uid)]
+
+    def lifecycle(self, uid: int) -> list:
+        return [ev.kind for ev in self.events_for(uid)]
+
+    def ttfts(self) -> list:
+        """Seconds from enqueue to first token, one entry per request
+        that produced a first token."""
+        enq: dict = {}
+        out = []
+        for ev in self.events:
+            if ev.kind == "enqueued":
+                enq[ev.uid] = ev.t
+            elif ev.kind == "first_token" and ev.uid in enq:
+                out.append(ev.t - enq[ev.uid])
+        return out
+
+    def token_latencies(self) -> list:
+        """Per-token latency deltas, one entry per generated token."""
+        prev: dict = {}
+        out = []
+        for ev in self.events:
+            if ev.kind == "enqueued":
+                prev[ev.uid] = ev.t
+            elif ev.kind in ("first_token", "decode"):
+                out.append(ev.t - prev.get(ev.uid, ev.t))
+                prev[ev.uid] = ev.t
+        return out
+
+    def pages_held_hwm(self) -> int:
+        """High-water mark of total pages held across live requests,
+        sampled at trace transitions."""
+        held: dict = {}
+        hwm = 0
+        for ev in self.events:
+            if ev.pages_held is not None:
+                held[ev.uid] = ev.pages_held
+                hwm = max(hwm, sum(held.values()))
+        return hwm
+
+    def preemption_count(self) -> int:
+        return sum(1 for ev in self.events if ev.kind == "preempted")
+
+    # ------------------------------------------------------------ validity
+    @staticmethod
+    def check_lifecycle(kinds) -> str | None:
+        """Validate one request's event-kind sequence against the
+        lifecycle grammar; returns None if valid, else an error string.
+
+        Grammar::
+
+            enqueued
+            ( admitted prefilled TOKEN decode* preempted )*
+              admitted prefilled TOKEN decode*
+            finished
+
+        where TOKEN is ``first_token`` on the first residency and
+        ``decode`` on re-admissions (the resume token is sampled from
+        the re-prefill logits, which is a decode step for the request).
+        """
+        kinds = list(kinds)
+        if not kinds:
+            return "empty trace"
+        if kinds[0] != "enqueued":
+            return f"starts with {kinds[0]!r}, expected 'enqueued'"
+        i, first_residency = 1, True
+        while i < len(kinds):
+            if kinds[i] != "admitted":
+                return f"event {i}: expected 'admitted', got {kinds[i]!r}"
+            i += 1
+            if i >= len(kinds) or kinds[i] != "prefilled":
+                return f"event {i}: expected 'prefilled' after 'admitted'"
+            i += 1
+            want = "first_token" if first_residency else "decode"
+            if i >= len(kinds) or kinds[i] != want:
+                got = kinds[i] if i < len(kinds) else "<end>"
+                return f"event {i}: expected {want!r} after prefill, " \
+                       f"got {got!r}"
+            i += 1
+            first_residency = False
+            while i < len(kinds) and kinds[i] == "decode":
+                i += 1
+            if i >= len(kinds):
+                return "trace ends without 'finished'"
+            if kinds[i] == "preempted":
+                i += 1
+                continue
+            if kinds[i] == "finished":
+                if i != len(kinds) - 1:
+                    return f"events after 'finished' at {i}"
+                return None
+            return f"event {i}: unexpected {kinds[i]!r}"
+        return "trace ends without 'finished'"

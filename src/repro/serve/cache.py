@@ -121,6 +121,7 @@ class CacheBackend:
         self.max_batch = int(max_batch)
         self.max_len = int(max_len)
         self.caches = None
+        self._metrics = None
 
     # -- admission contract -------------------------------------------------
     def can_admit(self, n_prompt: int) -> bool:
@@ -163,6 +164,28 @@ class CacheBackend:
     # -- reporting ----------------------------------------------------------
     def memory_report(self) -> dict:
         raise NotImplementedError
+
+    def bind_metrics(self, registry):
+        """Attach a :class:`repro.obs.MetricsRegistry` (or None).  The
+        engine calls this so ``publish_metrics`` and event counters have
+        somewhere to write; instrumentation is host-side bookkeeping
+        only -- cache data movement is untouched."""
+        self._metrics = registry if (registry is not None
+                                     and registry.enabled) else None
+
+    def publish_metrics(self):
+        """Mirror the numeric fields of :meth:`memory_report` into
+        ``serve_cache_<key>{backend=...}`` gauges."""
+        if self._metrics is None:
+            return
+        for key, value in self.memory_report().items():
+            if isinstance(value, bool) or not isinstance(
+                    value, (int, float)):
+                continue
+            self._metrics.gauge(
+                f"serve_cache_{key}",
+                f"Cache backend memory_report field {key!r}",
+                labels=("backend",)).set(value, backend=self.name)
 
     def reset(self):
         """Drop all residency bookkeeping (buffers may keep stale data;
@@ -345,9 +368,32 @@ class PagedCache(CacheBackend):
                 f"but the pool only has {self.n_pages}; it could never be "
                 f"admitted")
 
+    def bind_metrics(self, registry):
+        super().bind_metrics(registry)
+        if self._metrics is not None:
+            # pre-create so the series exists (at 0) even in runs that
+            # never exhaust the pool
+            self._metrics.counter(
+                "serve_pool_exhausted_total",
+                "Page-pool allocation failures (each triggers a "
+                "preemption in the engine)").inc(0)
+            self._gauge_pages()
+
+    def _count_exhausted(self):
+        if self._metrics is not None:
+            self._metrics.counter("serve_pool_exhausted_total").inc()
+
+    def _gauge_pages(self):
+        if self._metrics is not None:
+            self._metrics.gauge(
+                "serve_pages_in_use",
+                "Pages currently allocated out of the pool").set(
+                self.pages_in_use)
+
     def alloc(self, uid, slot, n_prompt):
         n = self._admission_pages(n_prompt)
         if len(self._free) < n:
+            self._count_exhausted()
             raise PoolExhausted(
                 f"need {n} pages for uid {uid}, {len(self._free)} free")
         h = CacheHandle(uid=uid, slot=slot, n_tokens=n_prompt,
@@ -370,6 +416,7 @@ class PagedCache(CacheBackend):
             pg = nxt // self.page_size
             if pg >= len(handle.pages):
                 if not self._free:
+                    self._count_exhausted()
                     raise PoolExhausted(
                         f"uid {handle.uid} needs page {pg}, pool empty")
                 phys = self._free.popleft()
@@ -386,9 +433,11 @@ class PagedCache(CacheBackend):
         self._table[handle.slot] = 0
         self._table_dev = _table_clear_row(self._table_dev, handle.slot)
         self._handles.pop(handle.slot, None)
+        self._gauge_pages()
 
     def _note_usage(self):
         self._peak_pages = max(self._peak_pages, self.pages_in_use)
+        self._gauge_pages()
 
     @property
     def pages_in_use(self) -> int:

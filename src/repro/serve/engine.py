@@ -39,8 +39,10 @@ import numpy as np
 from repro.launch import steps
 from repro.models import lm
 from repro.nn import quantized as nnq
+from repro.obs import run_summary
 from repro.serve import cache as cache_mod
-from repro.serve.sampling import (SamplingParams, make_rng, sample_token,
+from repro.serve.sampling import (SamplingParams, batch_need_top_k,
+                                  make_rng, sample_token,
                                   sample_tokens_device)
 from repro.serve.scheduler import Request, Scheduler, SlotState
 
@@ -146,7 +148,7 @@ class InferenceServer:
                  max_batch: int = 8, strict_plan: bool = True,
                  cache: str = "dense", page_size: int = 16,
                  pages: int | None = None, reserve_pages: int = 1,
-                 sample_on_device: bool = True):
+                 sample_on_device: bool = True, obs=None):
         if cfg.is_encdec or cfg.frontend != "none":
             raise NotImplementedError(
                 f"InferenceServer serves decoder-only token-frontend "
@@ -233,6 +235,37 @@ class InferenceServer:
             static_argnums=(6,))
         # per-step decode latency split: [gather_s, step_s, n_steps]
         self._step_timing = [0.0, 0.0, 0]
+        self.obs = None
+        self._reg = None
+        self.attach_obs(obs)
+
+    # ------------------------------------------------------- observability
+    def attach_obs(self, obs):
+        """Attach (or with ``obs=None`` detach) a
+        :class:`repro.obs.Observability` bundle.  Instrumentation is
+        host-side only -- the jitted closures are untouched, so this can
+        be called on an already-warmed server without triggering
+        recompiles (``benchmarks/serve_bench.py`` relies on that to
+        measure obs overhead on identical compiled code)."""
+        self.obs = obs
+        reg = None
+        if obs is not None and obs.registry.enabled:
+            reg = obs.registry
+        self._reg = reg
+        self.backend.bind_metrics(reg)
+
+    def metrics_snapshot(self) -> dict:
+        """Current metrics + (when tracing) the last serve run's summary;
+        ``{}`` when no Observability bundle is attached."""
+        if self.obs is None:
+            return {}
+        self.backend.publish_metrics()
+        out = {"metrics": (self.obs.registry.snapshot()
+                           if self.obs.registry.enabled else {})}
+        if self.obs.tracer is not None:
+            out["summary"] = run_summary(self.obs.tracer,
+                                         self.obs.registry)
+        return out
 
     # ------------------------------------------------------- sampling glue
     def _sample_first(self, logits_last, st_req, uid, tidx, rng):
@@ -262,14 +295,23 @@ class InferenceServer:
         contract) simply queue for capacity.  Returns
         ``{uid: np.ndarray(tokens)}``.
         """
-        sched = Scheduler(self.max_batch, self.max_len)
+        reg = self._reg
+        tracer = self.obs.tracer if self.obs is not None else None
+        if tracer is not None:
+            tracer.start()          # per-run trace; metrics cumulative
+        sched = Scheduler(self.max_batch, self.max_len, tracer=tracer)
         backend = self.backend
         backend.reset()
         self._step_timing = [0.0, 0.0, 0]
+        n_requests = 0
         for r in requests:
             backend.check_feasible(np.asarray(r.prompt).size,
                                    r.sampling.max_tokens)
             sched.submit(r)
+            n_requests += 1
+        if reg is not None:
+            reg.counter("serve_requests_total",
+                        "Requests submitted to serve()").inc(n_requests)
         now = 0
         n_steps = n_admitted = 0
 
@@ -283,9 +325,28 @@ class InferenceServer:
                     break
                 entry, slot = adm
                 req = entry.request
+                resumed = entry.resume is not None
                 tokens_np = entry.tokens()
                 handle = backend.alloc(req.uid, slot, tokens_np.size)
+                if tracer is not None:
+                    tracer.event(req.uid, "admitted", n=tokens_np.size,
+                                 pages_held=len(handle.pages), slot=slot,
+                                 resumed=resumed)
+                if reg is not None:
+                    reg.counter(
+                        "serve_admissions_total",
+                        "Requests admitted into a decode slot",
+                        labels=("resumed",)).inc(
+                        resumed="true" if resumed else "false")
                 logits = self._run_prefill(backend, handle, tokens_np)
+                if tracer is not None:
+                    tracer.event(req.uid, "prefilled", n=tokens_np.size,
+                                 pages_held=len(handle.pages), slot=slot)
+                if reg is not None:
+                    reg.counter("serve_prefill_tokens_total",
+                                "Tokens run through prefill (resumes "
+                                "re-prefill prompt + generated)").inc(
+                        int(tokens_np.size))
                 n_admitted += 1
                 if entry.resume is None:
                     rng = make_rng(req.sampling, req.uid)
@@ -306,6 +367,14 @@ class InferenceServer:
                     st.remaining -= 1
                     st.order = n_admitted
                     st.handle = handle
+                if tracer is not None:
+                    # first residency yields the request's first token;
+                    # a resume's admission token is a decode step of its
+                    # ongoing stream
+                    tracer.event(req.uid,
+                                 "decode" if resumed else "first_token",
+                                 n=len(st.out),
+                                 pages_held=len(handle.pages), slot=slot)
                 sched.activate(slot, st)
                 if st.remaining <= 0 or st.pos >= self.max_len:
                     st.truncated = st.remaining > 0
@@ -330,6 +399,10 @@ class InferenceServer:
                 st.out.append(tok)
                 st.last_token = tok
                 st.remaining -= 1
+                if tracer is not None:
+                    tracer.event(st.request.uid, "decode", n=len(st.out),
+                                 pages_held=len(st.handle.pages),
+                                 slot=st.slot)
                 if st.remaining <= 0:
                     backend.free(st.handle)
                     sched.complete(st.slot)
@@ -360,6 +433,7 @@ class InferenceServer:
                       "step_us_per_step": round(
                           step_s / timed * 1e6, 2) if timed else 0.0,
                       "memory": backend.memory_report()}
+        backend.publish_metrics()
         return {uid: np.asarray(s.out, np.int32)
                 for uid, s in sched.finished.items()}
 
@@ -411,11 +485,13 @@ class InferenceServer:
         width = self._live_width(active)
         t1 = time.perf_counter()
         step_end = None      # host-sampling path stamps the step's end
+        path = "host"        # which decode callable ran (metrics label)
         try:                 # itself, excluding its python sample loop
             if self.sample_on_device and all(
                     st.request.sampling.greedy for st in active):
                 # every active row is greedy: argmax decode, none of the
                 # sort/Gumbel machinery (bit-identical to the full sampler)
+                path = "greedy"
                 next_tok, caches = self._decode_greedy(
                     self.params, {"tokens": jnp.asarray(tokens)}, caches,
                     tables, jnp.asarray(pos), width)
@@ -423,6 +499,7 @@ class InferenceServer:
                 ids = np.asarray(next_tok)
                 return {st.slot: int(ids[st.slot]) for st in active}
             if self.sample_on_device:
+                path = "sample"
                 temps = np.zeros(self.max_batch, np.float32)
                 topks = np.zeros(self.max_batch, np.int32)
                 seeds = np.zeros(self.max_batch, np.int32)
@@ -437,8 +514,9 @@ class InferenceServer:
                     tidx[st.slot] = len(st.out)
                 # trace-time flag: rows that truncate need the full-vocab
                 # sort; a pure-temperature batch skips it entirely
-                need_top_k = any(0 < st.request.sampling.top_k
-                                 < self.cfg.vocab for st in active)
+                need_top_k = batch_need_top_k(
+                    [st.request.sampling for st in active],
+                    self.cfg.vocab, self._reg)
                 next_tok, caches = self._decode_sample(
                     self.params, {"tokens": jnp.asarray(tokens)}, caches,
                     tables, jnp.asarray(pos), jnp.asarray(temps),
@@ -463,6 +541,16 @@ class InferenceServer:
             self._step_timing[0] += t1 - t0
             self._step_timing[1] += t2 - t1
             self._step_timing[2] += 1
+            if self._reg is not None:
+                # one series per (path, width) == one compiled decode
+                # variant (width is a static argument of the jit)
+                self._reg.counter(
+                    "serve_decode_steps_total",
+                    "Batched decode steps by decode path and static "
+                    "live-table width",
+                    labels=("path", "width")).inc(
+                    path=path,
+                    width="dense" if width is None else str(width))
 
     def _append_or_preempt(self, sched, backend, st):
         """Back the request's next cache write with storage; on pool
@@ -477,6 +565,11 @@ class InferenceServer:
                 victim = max(sched.active, key=lambda s: s.order)
                 backend.free(victim.handle)
                 sched.preempt(victim.slot)
+                if self._reg is not None:
+                    self._reg.counter(
+                        "serve_preemptions_total",
+                        "Requests preempted back to the queue on pool "
+                        "exhaustion").inc()
                 if victim is st:
                     return
 

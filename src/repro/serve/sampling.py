@@ -105,6 +105,25 @@ def sample_tokens_device(logits: jax.Array, temperature: jax.Array,
         jnp.int32)
 
 
+def batch_need_top_k(samplings, vocab: int, registry=None) -> bool:
+    """The trace-time ``need_top_k`` flag for one decode step's batch:
+    True iff any row actually truncates (``0 < top_k < vocab``).
+
+    When a metrics registry is given, counts the step into
+    ``serve_topk_sort_steps_total{skipped}`` so the top-k-skip hit rate
+    (fraction of decode steps that avoided the full-vocab sort) is
+    observable.
+    """
+    need = any(0 < sp.top_k < vocab for sp in samplings)
+    if registry is not None:
+        registry.counter(
+            "serve_topk_sort_steps_total",
+            "Sampled decode steps by whether the full-vocab top-k sort "
+            "was skipped", labels=("skipped",)).inc(
+            skipped="false" if need else "true")
+    return need
+
+
 def make_rng(params: SamplingParams, uid: int) -> np.random.Generator:
     """The request's random stream: a function of (seed, uid) only, so
     re-serving the same request replays identical draws."""

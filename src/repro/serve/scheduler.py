@@ -85,15 +85,22 @@ class PendingEntry:
 
 
 class Scheduler:
-    """Admission + slot lifecycle for a ``max_batch``-slot decode pool."""
+    """Admission + slot lifecycle for a ``max_batch``-slot decode pool.
 
-    def __init__(self, max_batch: int, max_len: int):
+    ``tracer`` (a :class:`repro.obs.RequestTracer` or None) receives the
+    queue-side lifecycle events -- ``enqueued`` / ``preempted`` /
+    ``finished``; the engine records the residency-side ones (admitted,
+    prefilled, tokens) because only it knows prefill and cache timing.
+    """
+
+    def __init__(self, max_batch: int, max_len: int, tracer=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_len < 2:
             raise ValueError(f"max_len must be >= 2, got {max_len}")
         self.max_batch = max_batch
         self.max_len = max_len
+        self.tracer = tracer
         self.slots: list[Optional[SlotState]] = [None] * max_batch
         self.pending: collections.deque[PendingEntry] = collections.deque()
         self.finished: dict[int, SlotState] = {}
@@ -118,6 +125,10 @@ class Scheduler:
                 e.request.uid == request.uid for e in self.pending):
             raise ValueError(f"duplicate request uid {request.uid}")
         self.pending.append(PendingEntry(request))
+        if self.tracer is not None:
+            self.tracer.event(request.uid, "enqueued",
+                              n=int(prompt.size),
+                              arrival=int(request.arrival))
 
     # ---------------------------------------------------------- admission
     def free_slot(self) -> Optional[int]:
@@ -152,6 +163,12 @@ class Scheduler:
         assert state is not None, f"slot {slot} is empty"
         self.finished[state.request.uid] = state
         self.slots[slot] = None
+        if self.tracer is not None:
+            # the engine frees the cache handle before completing, so
+            # pages_held is truthfully 0 here
+            self.tracer.event(state.request.uid, "finished",
+                              n=len(state.out), pages_held=0, slot=slot,
+                              truncated=bool(state.truncated))
 
     def preempt(self, slot: int) -> SlotState:
         """Evict a running request back to the FRONT of the queue.  Among
@@ -162,6 +179,10 @@ class Scheduler:
         self.slots[slot] = None
         self.pending.appendleft(PendingEntry(state.request, resume=state))
         self.preemptions += 1
+        if self.tracer is not None:
+            # the engine frees the victim's pages before preempting
+            self.tracer.event(state.request.uid, "preempted",
+                              n=len(state.out), pages_held=0, slot=slot)
         return state
 
     # ------------------------------------------------------------ queries

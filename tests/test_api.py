@@ -220,6 +220,63 @@ class TestCheckpointResume:
         assert resumed.plan.equals(reference.plan)
         assert resumed.acc_final == reference.acc_final
 
+    def test_resumed_run_does_not_reemit_replayed_metrics(self, tmp_path):
+        """Metric emission must be idempotent under checkpoint resume: a
+        resume restores to an earlier checkpoint and replays the steps up
+        to the crash point, and those replayed steps flow through the
+        hooks again -- the shared registry must not double-count them."""
+        from repro.obs import MetricsRegistry
+
+        g = cnn.dscnn(width=8)
+        comp = api.Compressor(g, synthetic.GSC_LIKE, batch=8, seed=0)
+        noop = lambda *_args, **_kw: None                    # noqa: E731
+        mk = lambda: [api.Warmup(steps=8),                   # noqa: E731
+                      api.JointSearch(steps=16, lam=5.0),
+                      api.Finetune(steps=4)]
+
+        # reference: uninterrupted run, every step logged once
+        ref_reg = MetricsRegistry()
+        comp.run(mk(), hooks=[api.MetricsLog(every=1, printer=noop)],
+                 registry=ref_reg)
+        ref_pts = ref_reg.counter("compress_step_points_total",
+                                  labels=("phase", "metric"))
+        assert ref_pts.value(phase="search", metric="task") == 16
+        assert ref_pts.value(phase="warmup", metric="loss") == 8
+
+        class Boom(api.Hook):
+            def on_step(self, phase, state, step, metrics, train_state):
+                if phase.name == "search" and step == 11:
+                    raise RuntimeError("boom")
+
+        # crash at search step 11 (checkpoints every 4 -> restore to
+        # step 8, replaying steps 8-11), then resume with the SAME
+        # registry -- the process-survives-the-crash scenario
+        reg = MetricsRegistry()
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        with pytest.raises(RuntimeError, match="boom"):
+            comp.run(mk(),
+                     hooks=[api.MetricsLog(every=1, printer=noop), Boom()],
+                     checkpoint=mgr, checkpoint_every=4, registry=reg)
+        mgr.wait()
+        resumed = comp.run(
+            mk(), hooks=[api.MetricsLog(every=1, printer=noop)],
+            checkpoint=CheckpointManager(str(tmp_path), keep=3),
+            checkpoint_every=4, registry=reg)
+
+        pts = reg.counter("compress_step_points_total",
+                          labels=("phase", "metric"))
+        for phase, metric, total in [("warmup", "loss", 8),
+                                     ("search", "task", 16),
+                                     ("search", "reg", 16),
+                                     ("finetune", "loss", 4)]:
+            assert pts.value(phase=phase, metric=metric) == total, \
+                (phase, metric)
+        # phase wall time reached the registry too
+        assert reg.gauge("compress_phase_seconds", labels=("phase",)) \
+            .value(phase="search") > 0
+        # and the compression outcome is untouched by the registry
+        assert resumed.plan is not None
+
     def test_resume_bit_exact_with_activation_mps(self, tmp_path):
         """Regression: the cost normalizer must be rebuilt from the INITIAL
         delta logits on resume. With px > 1 option and a delta-dependent
