@@ -40,7 +40,31 @@ from repro.serve import engine
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
+
+
+def machine_baseline(repeats=5, n=50, dim=256):
+    """Fixed-work calibration row: a seeded float32 matmul chain whose
+    wall time depends only on host speed.  Cross-PR ``BENCH_serve.json``
+    deltas divide by this row's ``wall_s`` before being read as code
+    regressions -- the PR 4->5 7088->3659 tok/s swing was machine speed
+    (per ROADMAP), which this row makes quantifiable."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((dim, dim)).astype(np.float32)
+    b = rng.standard_normal((dim, dim)).astype(np.float32)
+    wall = float("inf")
+    for _ in range(repeats):
+        x = a
+        t0 = time.time()
+        for _ in range(n):
+            x = x @ b
+            x = x / np.float32(np.abs(x).max() + 1.0)   # stay finite
+        wall = min(wall, time.time() - t0)
+    return {"name": "machine_baseline", "cache": None,
+            "matmul_chain": {"dim": dim, "n": n},
+            "wall_s": round(wall, 5),
+            "matmul_gflops": round(2 * n * dim**3 / wall / 1e9, 2),
+            "plan": None}
 
 
 def make_requests(cfg, n, prompt_lens, tokens, gap):
@@ -210,7 +234,10 @@ def main(argv=None):
     variants.append(("quant-mixed",
                      engine.synthetic_plan(cfg, params, bits=None, seed=0)))
 
-    results = []
+    base = machine_baseline()
+    results = [base]
+    print(f"serve/machine_baseline,{base['wall_s'] * 1e6:.0f},"
+          f"matmul_gflops={base['matmul_gflops']}")
     for name, plan in variants:
         # paged counterpart for the trajectory headliners only (float +
         # mixed plan): same workload, identical tokens (asserted inside

@@ -1,0 +1,26 @@
+"""repro.fleet: multi-replica serving over the plan Pareto front.
+
+A :class:`Fleet` binds N :class:`~repro.serve.engine.InferenceServer`
+replicas to plan tiers (float / 8-bit / mixed / 2-bit points from one
+compression search), routes requests across them with pluggable
+policies (``round_robin`` / ``least_loaded`` / ``pareto_degrade`` /
+``static:<tier>``), enforces per-request deadlines by cancelling
+overdue work (pages freed, ``timeout`` lifecycle event, bounded
+retries), and reports SLO attainment through the ``repro.obs``
+exporters.  See ``fleet.py`` for the virtual-time model.
+"""
+from repro.fleet.fleet import (Attempt, Fleet, FleetRequest, Replica,
+                               RequestRecord, TierSpec, plan_mean_bits,
+                               tier_from_plan)
+from repro.fleet.loadgen import burst_trace, poisson_trace, slo_report
+from repro.fleet.router import (ROUTERS, LeastLoaded, ParetoDegrade,
+                                RoundRobin, Router, StaticTier,
+                                make_router)
+
+__all__ = [
+    "Fleet", "FleetRequest", "Replica", "RequestRecord", "Attempt",
+    "TierSpec", "plan_mean_bits", "tier_from_plan",
+    "poisson_trace", "burst_trace", "slo_report",
+    "Router", "RoundRobin", "LeastLoaded", "ParetoDegrade",
+    "StaticTier", "ROUTERS", "make_router",
+]

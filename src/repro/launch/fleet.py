@@ -1,0 +1,165 @@
+"""Fleet launcher: multi-replica serving across plan tiers with a
+Pareto-aware router, deadline admission and an open-loop load trace.
+
+    PYTHONPATH=src python -m repro.launch.fleet \
+        --arch llama3.2-1b-smoke --tiers float,demo \
+        --requests 12 --rate 40 --deadline-ms 400
+
+    # Pareto-degrade routing over four tiers, burst arrivals, obs
+    # artifacts for repro.obs.validate:
+    PYTHONPATH=src python -m repro.launch.fleet \
+        --tiers float,w8,mixed,w2 --policy pareto_degrade \
+        --trace-kind burst --metrics fleet.prom --trace fleet.jsonl
+
+Tier specs (comma-separated): ``float`` (no plan), ``demo`` /
+``mixed`` (seeded random mixed-precision plan), ``w<bits>`` (uniform
+``bits`` everywhere), or a CompressionPlan stem/path.  Every replica
+runs the same arch/params; latency is the fleet's deterministic
+virtual clock (see ``repro.fleet.fleet``), token content is real.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serve import engine
+from repro import fleet as fleet_mod
+
+
+def build_tier(spec: str, cfg, params, base_step_ms: float):
+    """Tier spec -> TierSpec (see module docstring for the grammar)."""
+    if spec == "float":
+        plan = None
+    elif spec in ("demo", "mixed"):
+        plan = engine.synthetic_plan(cfg, params, bits=None, seed=0)
+    elif spec.startswith("w") and spec[1:].isdigit():
+        plan = engine.synthetic_plan(cfg, params, bits=int(spec[1:]))
+    else:
+        from repro.api.plan import CompressionPlan
+        plan = CompressionPlan.load(spec)
+    return fleet_mod.tier_from_plan(spec, plan,
+                                    base_step_ms=base_step_ms)
+
+
+def build_fleet(cfg, params, tier_specs, *, policy: str,
+                max_len: int, max_batch: int, cache: str,
+                page_size: int, pages, base_step_ms: float,
+                metrics: bool = True) -> fleet_mod.Fleet:
+    pairs = []
+    for spec in tier_specs:
+        tier = build_tier(spec, cfg, params, base_step_ms)
+        server = engine.InferenceServer(
+            cfg, params, plan=tier.plan, max_len=max_len,
+            max_batch=max_batch, cache=cache, page_size=page_size,
+            pages=pages)
+        pairs.append((tier, server))
+    return fleet_mod.Fleet(pairs, policy=policy, metrics=metrics)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b-smoke")
+    ap.add_argument("--tiers", default="float,demo",
+                    help="comma-separated tier specs: float, demo/mixed, "
+                         "w<bits>, or a CompressionPlan stem/path")
+    ap.add_argument("--policy", default="pareto_degrade",
+                    help="round_robin | least_loaded | pareto_degrade | "
+                         "static:<tier>")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="open-loop Poisson arrival rate, requests per "
+                         "virtual second")
+    ap.add_argument("--trace-kind", default="poisson",
+                    choices=["poisson", "burst"])
+    ap.add_argument("--burst-size", type=int, default=4)
+    ap.add_argument("--burst-every-ms", type=float, default=150.0)
+    ap.add_argument("--deadline-ms", type=float, default=400.0,
+                    help="per-request deadline on the virtual clock "
+                         "(<=0 disables deadlines)")
+    ap.add_argument("--retry-budget", type=int, default=1)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache", default="paged",
+                    choices=["dense", "paged"])
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=None)
+    ap.add_argument("--base-step-ms", type=float, default=8.0,
+                    help="modeled decode-step cost of the float tier")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the shared registry in Prometheus text "
+                         "format to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the merged per-replica lifecycle trace "
+                         "as JSON lines to PATH")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the SLO report as JSON to PATH")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    params = lm.init_params(cfg, jax.random.key(0))
+    tier_specs = [s for s in args.tiers.split(",") if s]
+    flt = build_fleet(cfg, params, tier_specs, policy=args.policy,
+                      max_len=args.max_len, max_batch=args.max_batch,
+                      cache=args.cache, page_size=args.page_size,
+                      pages=args.pages, base_step_ms=args.base_step_ms)
+    for rep in flt.replicas:
+        print(f"[fleet] replica {rep.tier.name}: "
+              f"quality={rep.tier.quality:.2f} bits, "
+              f"step={rep.tier.step_ms:.2f} ms")
+
+    deadline = args.deadline_ms if args.deadline_ms > 0 else None
+    common = dict(vocab=cfg.vocab, prompt_len=args.prompt_len,
+                  max_tokens=args.tokens, deadline_ms=deadline,
+                  retry_budget=args.retry_budget,
+                  temperature=args.temperature, top_k=args.top_k,
+                  seed=args.seed)
+    if args.trace_kind == "poisson":
+        trace = fleet_mod.poisson_trace(args.requests,
+                                        rate_rps=args.rate, **common)
+    else:
+        n_bursts = -(-args.requests // args.burst_size)
+        trace = fleet_mod.burst_trace(
+            n_bursts, args.burst_size,
+            burst_every_ms=args.burst_every_ms, **common)[:args.requests]
+
+    records = flt.run(trace)
+    report = fleet_mod.slo_report(flt, records)
+    st = report["status"]
+    att = report["deadline_attainment"]
+    print(f"[fleet] {len(records)} requests via {args.policy}: "
+          f"{st['finished']} finished, {st['timeout']} timeout, "
+          f"{st['shed']} shed, {report['degraded']} degraded, "
+          f"{report['retries']} retries"
+          + (f", attainment={att:.2%}" if att is not None else ""))
+    fmt = lambda v: "n/a" if v is None else f"{v:.1f}ms"
+    for name, t in report["per_tier"].items():
+        print(f"[fleet]   {name}: {t['requests']} served, ttft "
+              f"p50={fmt(t['ttft_ms']['p50'])} "
+              f"p99={fmt(t['ttft_ms']['p99'])}, token "
+              f"p50={fmt(t['token_latency_ms']['p50'])}")
+
+    if args.metrics:
+        from repro.obs import write_prometheus
+        write_prometheus(flt.registry, args.metrics)
+        print(f"[obs] metrics -> {args.metrics}")
+    if args.trace:
+        flt.write_trace(args.trace)
+        print(f"[obs] trace -> {args.trace} "
+              f"({len(flt.trace_events())} events)")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"[fleet] report -> {args.report}")
+
+
+if __name__ == "__main__":
+    main()

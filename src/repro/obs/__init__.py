@@ -27,9 +27,15 @@ class Observability:
     ``InferenceServer(..., obs=...)`` or ``server.attach_obs(obs)``.
     """
 
-    def __init__(self, metrics: bool = True, trace: bool = True):
-        self.registry = MetricsRegistry(enabled=metrics)
-        self.tracer = (RequestTracer(self.registry) if trace else None)
+    def __init__(self, metrics: bool = True, trace: bool = True,
+                 registry=None, replica=None):
+        # pass registry= to share one metric namespace across several
+        # servers (the fleet does this: one registry, one tracer per
+        # replica tagged via replica=)
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry(enabled=metrics))
+        self.tracer = (RequestTracer(self.registry, replica=replica)
+                       if trace else None)
 
     def summary(self) -> dict:
         """End-of-run summary (empty when tracing is off)."""

@@ -97,6 +97,7 @@ def run_summary(tracer, registry=None) -> dict:
         "pages_held_hwm": tracer.pages_held_hwm(),
         "ttft_s": percentiles(tracer.ttfts()),
         "token_latency_s": percentiles(tracer.token_latencies()),
+        "queue_wait_s": percentiles(tracer.queue_waits()),
     }
     if registry is not None and registry.enabled:
         snap = registry.snapshot()

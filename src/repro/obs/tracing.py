@@ -5,7 +5,12 @@ leaves a trail of :class:`TraceEvent` records::
 
     enqueued -> admitted -> prefilled -> first_token -> decode(n)*
              -> (preempted -> admitted -> prefilled -> decode(n)* )*
-             -> finished
+             -> finished | timeout | cancelled
+
+``timeout`` and ``cancelled`` are the cancellation terminals (the
+engine's ``cancel()`` API frees the request's cache pages first); a
+timed-out or cancelled uid may be *re-enqueued* -- the fleet layer's
+retry path -- which starts a fresh episode of the same grammar.
 
 Timestamps are monotonic (``time.perf_counter``) relative to the start
 of the serve run, so event deltas are meaningful even across wall-clock
@@ -16,6 +21,10 @@ The tracer doubles as the feed for the latency histograms: when a
 registry is attached, ``first_token`` observes ``serve_ttft_seconds``
 and every token-bearing event observes ``serve_token_latency_seconds``,
 so histogram counts reconcile exactly with the engine's token totals.
+It also feeds the queue-side series: ``serve_queue_depth`` (requests
+waiting for a slot, per ``replica`` label) and
+``serve_queue_wait_seconds`` (enqueued->admitted, re-queues measured
+from the preemption).
 """
 from __future__ import annotations
 
@@ -23,7 +32,10 @@ import time
 from dataclasses import dataclass, field
 
 EVENT_KINDS = ("enqueued", "admitted", "prefilled", "first_token",
-               "decode", "preempted", "finished")
+               "decode", "preempted", "finished", "timeout", "cancelled")
+# events that end a residency episode for a uid (a timeout/cancelled uid
+# may be re-enqueued by the fleet's retry path; finished is final)
+TERMINAL_KINDS = ("finished", "timeout", "cancelled")
 
 
 @dataclass
@@ -56,19 +68,32 @@ class RequestTracer:
     runs while the trace is per-run.
     """
 
-    def __init__(self, registry=None):
+    def __init__(self, registry=None, replica=None):
         self.registry = registry if (registry is not None
                                      and registry.enabled) else None
+        # fleet replicas share one registry; the replica tag keys the
+        # queue-side series so per-replica depth/wait stay separable
+        # (solo servers use the empty tag)
+        self.replica = "" if replica is None else str(replica)
         self.events: list[TraceEvent] = []
         self._t0 = time.perf_counter()
         self._enq_t: dict[int, float] = {}
         self._last_token_t: dict[int, float] = {}
+        self._queued: dict[int, float] = {}   # uid -> queue-entry time
 
     def start(self):
         self.events = []
         self._t0 = time.perf_counter()
         self._enq_t = {}
         self._last_token_t = {}
+        self._queued = {}
+
+    def rebase(self, t0: float):
+        """Move the time origin to ``t0`` (a ``time.perf_counter``
+        value).  The fleet rebases every replica tracer to one shared
+        origin right after starting them, so the merged multi-replica
+        trace is globally ordered by ``t``."""
+        self._t0 = t0
 
     # ------------------------------------------------------------ recording
     def event(self, uid: int, kind: str, *, n=None, pages_held=None,
@@ -93,6 +118,30 @@ class RequestTracer:
             reg.counter("serve_trace_events_total",
                         "Lifecycle trace events recorded",
                         labels=("kind",)).inc(kind=kind)
+        # queue-side series: depth counts requests waiting for a decode
+        # slot (enqueued or preempted back to the queue); wait is
+        # queue-entry -> admitted, so re-queues measure from preemption
+        if kind in ("enqueued", "preempted"):
+            self._queued[ev.uid] = t
+        elif kind == "admitted":
+            entered = self._queued.pop(ev.uid, None)
+            if reg is not None:
+                reg.histogram(
+                    "serve_queue_wait_seconds",
+                    "Queue wait from enqueue (or re-queue on "
+                    "preemption) to admission into a decode slot",
+                    labels=("replica",)).observe(
+                    t - (t if entered is None else entered),
+                    replica=self.replica)
+        elif kind in ("timeout", "cancelled"):
+            self._queued.pop(ev.uid, None)
+        if reg is not None and kind in ("enqueued", "admitted",
+                                        "preempted", "timeout",
+                                        "cancelled"):
+            reg.gauge("serve_queue_depth",
+                      "Requests waiting for a decode slot",
+                      labels=("replica",)).set(len(self._queued),
+                                               replica=self.replica)
         if kind in ("first_token", "decode"):
             # Every generated token passes through exactly one of these
             # events, so serve_token_latency_seconds' count equals the
@@ -153,6 +202,18 @@ class RequestTracer:
                 prev[ev.uid] = ev.t
         return out
 
+    def queue_waits(self) -> list:
+        """Queue-entry (enqueued / preempted) to admission deltas, one
+        entry per admission."""
+        entered: dict = {}
+        out = []
+        for ev in self.events:
+            if ev.kind in ("enqueued", "preempted"):
+                entered[ev.uid] = ev.t
+            elif ev.kind == "admitted":
+                out.append(ev.t - entered.pop(ev.uid, ev.t))
+        return out
+
     def pages_held_hwm(self) -> int:
         """High-water mark of total pages held across live requests,
         sampled at trace transitions."""
@@ -173,47 +234,76 @@ class RequestTracer:
         """Validate one request's event-kind sequence against the
         lifecycle grammar; returns None if valid, else an error string.
 
-        Grammar::
+        Grammar (one or more *episodes*; every episode but the last
+        ends in ``cancelled`` or ``timeout`` -- the fleet's retry path
+        re-enqueues the uid -- and the final one ends in any terminal)::
 
-            enqueued
-            ( admitted prefilled TOKEN decode* preempted )*
-              admitted prefilled TOKEN decode*
-            finished
+            EPISODE  := enqueued RESIDENCY* TERMINAL
+            RESIDENCY:= admitted prefilled TOKEN decode* [preempted]
+            TERMINAL := finished | cancelled | timeout
 
-        where TOKEN is ``first_token`` on the first residency and
-        ``decode`` on re-admissions (the resume token is sampled from
-        the re-prefill logits, which is a decode step for the request).
+        where TOKEN is ``first_token`` on an episode's first residency
+        and ``decode`` on re-admissions (the resume token is sampled
+        from the re-prefill logits, which is a decode step for the
+        request); ``finished`` must follow a residency (a request can
+        only complete while resident), while ``cancelled``/``timeout``
+        may also strike a queued or preempted request directly, and
+        ``finished`` must be the uid's last event overall.
         """
         kinds = list(kinds)
         if not kinds:
             return "empty trace"
-        if kinds[0] != "enqueued":
-            return f"starts with {kinds[0]!r}, expected 'enqueued'"
-        i, first_residency = 1, True
-        while i < len(kinds):
-            if kinds[i] != "admitted":
-                return f"event {i}: expected 'admitted', got {kinds[i]!r}"
+        i, n = 0, len(kinds)
+        while i < n:
+            if kinds[i] != "enqueued":
+                return f"event {i}: expected 'enqueued', got {kinds[i]!r}"
             i += 1
-            if i >= len(kinds) or kinds[i] != "prefilled":
-                return f"event {i}: expected 'prefilled' after 'admitted'"
-            i += 1
-            want = "first_token" if first_residency else "decode"
-            if i >= len(kinds) or kinds[i] != want:
-                got = kinds[i] if i < len(kinds) else "<end>"
-                return f"event {i}: expected {want!r} after prefill, " \
-                       f"got {got!r}"
-            i += 1
-            first_residency = False
-            while i < len(kinds) and kinds[i] == "decode":
-                i += 1
-            if i >= len(kinds):
-                return "trace ends without 'finished'"
-            if kinds[i] == "preempted":
-                i += 1
-                continue
-            if kinds[i] == "finished":
-                if i != len(kinds) - 1:
-                    return f"events after 'finished' at {i}"
-                return None
-            return f"event {i}: unexpected {kinds[i]!r}"
-        return "trace ends without 'finished'"
+            first_residency = True
+            resident = False          # inside a residency, post-TOKEN
+            terminal = None
+            while terminal is None:
+                if i >= n:
+                    return "trace ends without a terminal event " \
+                           "(finished/cancelled/timeout)"
+                k = kinds[i]
+                if k in ("cancelled", "timeout"):
+                    terminal = k
+                    i += 1
+                elif k == "finished":
+                    if not resident:
+                        return f"event {i}: 'finished' without a " \
+                               f"residency"
+                    terminal = k
+                    i += 1
+                elif k == "preempted":
+                    if not resident:
+                        return f"event {i}: 'preempted' while not " \
+                               f"resident"
+                    resident = False
+                    i += 1
+                elif k == "admitted":
+                    if resident:
+                        return f"event {i}: 'admitted' while already " \
+                               f"resident"
+                    i += 1
+                    if i >= n or kinds[i] != "prefilled":
+                        return f"event {i}: expected 'prefilled' " \
+                               f"after 'admitted'"
+                    i += 1
+                    want = "first_token" if first_residency else "decode"
+                    if i >= n or kinds[i] != want:
+                        got = kinds[i] if i < n else "<end>"
+                        return f"event {i}: expected {want!r} after " \
+                               f"prefill, got {got!r}"
+                    i += 1
+                    first_residency = False
+                    resident = True
+                    while i < n and kinds[i] == "decode":
+                        i += 1
+                else:
+                    return f"event {i}: unexpected {k!r}"
+            if terminal == "finished" and i != n:
+                return f"events after 'finished' at {i - 1}"
+            # cancelled/timeout: any further events must be a fresh
+            # episode (the outer loop re-expects 'enqueued')
+        return None

@@ -131,6 +131,21 @@ def synthetic_plan(cfg, params, bits: int | None = None, seed: int = 0,
 # the serving API
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class StepResult:
+    """What one :meth:`InferenceServer.step` did.
+
+    ``produced`` maps uid -> tokens generated so far, for every request
+    that gained a token this step (admission token or decode token);
+    ``idle`` means no decode ran (the engine jumped the clock to the
+    next arrival, or had nothing at all to do)."""
+
+    admitted: list
+    produced: dict
+    finished: list
+    idle: bool = False
+
+
 class InferenceServer:
     """Plan-driven LM serving with continuous batching.
 
@@ -235,6 +250,12 @@ class InferenceServer:
             static_argnums=(6,))
         # per-step decode latency split: [gather_s, step_s, n_steps]
         self._step_timing = [0.0, 0.0, 0]
+        # session state (see the "serving" section): None between runs
+        self._sched = None
+        self._now = 0
+        self._n_steps = 0
+        self._n_admitted = 0
+        self._cancelled: dict = {}
         self.obs = None
         self._reg = None
         self.attach_obs(obs)
@@ -265,6 +286,7 @@ class InferenceServer:
         if self.obs.tracer is not None:
             out["summary"] = run_summary(self.obs.tracer,
                                          self.obs.registry)
+        out["load"] = self.load_report()
         return out
 
     # ------------------------------------------------------- sampling glue
@@ -286,112 +308,151 @@ class InferenceServer:
         return sample_token(row[: self.cfg.vocab], st_req.sampling, rng)
 
     # ------------------------------------------------------------ serving
-    def serve(self, requests) -> dict:
-        """Run every request to completion with continuous batching.
+    #
+    # The serving loop is a *session*: ``begin()`` opens one (resetting
+    # the cache backend and per-run trace), ``submit()`` enqueues,
+    # ``step()`` advances one admission+decode round, ``cancel()``
+    # removes a request mid-flight, ``end()`` closes the session and
+    # returns the finished streams.  ``serve()`` is the batch
+    # convenience wrapping the four; the fleet drives sessions directly
+    # so it can interleave arrivals, deadline scans and cancellations
+    # with decode steps.
 
-        Requests whose ``arrival > 0`` join the queue at that decode step
-        (streaming-arrivals mode); more requests than ``max_batch`` (or
-        than the page pool can hold at once -- the backend's admission
-        contract) simply queue for capacity.  Returns
-        ``{uid: np.ndarray(tokens)}``.
-        """
-        reg = self._reg
+    def begin(self, requests=()):
+        """Open a serving session (per-run trace reset, fresh scheduler,
+        cache backend reset) and submit ``requests``."""
         tracer = self.obs.tracer if self.obs is not None else None
         if tracer is not None:
             tracer.start()          # per-run trace; metrics cumulative
-        sched = Scheduler(self.max_batch, self.max_len, tracer=tracer)
-        backend = self.backend
-        backend.reset()
+        self._sched = Scheduler(self.max_batch, self.max_len,
+                                tracer=tracer)
+        self.backend.reset()
         self._step_timing = [0.0, 0.0, 0]
-        n_requests = 0
+        self._now = 0
+        self._n_steps = 0
+        self._n_admitted = 0
+        self._cancelled: dict = {}   # uid -> (reason, tokens np.ndarray)
         for r in requests:
-            backend.check_feasible(np.asarray(r.prompt).size,
-                                   r.sampling.max_tokens)
-            sched.submit(r)
-            n_requests += 1
-        if reg is not None:
-            reg.counter("serve_requests_total",
-                        "Requests submitted to serve()").inc(n_requests)
-        now = 0
-        n_steps = n_admitted = 0
+            self.submit(r)
+        return self
 
-        while sched.has_work:
-            # admit every arrived request the backend has memory for
-            while True:
-                adm = sched.pop_admissible(
-                    now, can_admit=lambda e: backend.can_admit(
-                        e.tokens().size))
-                if adm is None:
-                    break
-                entry, slot = adm
-                req = entry.request
-                resumed = entry.resume is not None
-                tokens_np = entry.tokens()
-                handle = backend.alloc(req.uid, slot, tokens_np.size)
-                if tracer is not None:
-                    tracer.event(req.uid, "admitted", n=tokens_np.size,
-                                 pages_held=len(handle.pages), slot=slot,
-                                 resumed=resumed)
-                if reg is not None:
-                    reg.counter(
-                        "serve_admissions_total",
-                        "Requests admitted into a decode slot",
-                        labels=("resumed",)).inc(
-                        resumed="true" if resumed else "false")
-                logits = self._run_prefill(backend, handle, tokens_np)
-                if tracer is not None:
-                    tracer.event(req.uid, "prefilled", n=tokens_np.size,
-                                 pages_held=len(handle.pages), slot=slot)
-                if reg is not None:
-                    reg.counter("serve_prefill_tokens_total",
-                                "Tokens run through prefill (resumes "
-                                "re-prefill prompt + generated)").inc(
-                        int(tokens_np.size))
-                n_admitted += 1
-                if entry.resume is None:
-                    rng = make_rng(req.sampling, req.uid)
-                    tok = self._sample_first(logits, req, req.uid, 0, rng)
-                    st = SlotState(request=req, slot=slot,
-                                   pos=int(tokens_np.size),
-                                   remaining=req.sampling.max_tokens - 1,
-                                   last_token=tok, out=[tok], rng=rng,
-                                   order=n_admitted, handle=handle)
-                else:       # preempted request: continue its exact stream
-                    st = entry.resume
-                    tok = self._sample_first(logits, req, req.uid,
-                                             len(st.out), st.rng)
-                    st.slot = slot
-                    st.pos = int(tokens_np.size)
-                    st.out.append(tok)
-                    st.last_token = tok
-                    st.remaining -= 1
-                    st.order = n_admitted
-                    st.handle = handle
-                if tracer is not None:
-                    # first residency yields the request's first token;
-                    # a resume's admission token is a decode step of its
-                    # ongoing stream
-                    tracer.event(req.uid,
-                                 "decode" if resumed else "first_token",
-                                 n=len(st.out),
-                                 pages_held=len(handle.pages), slot=slot)
-                sched.activate(slot, st)
-                if st.remaining <= 0 or st.pos >= self.max_len:
-                    st.truncated = st.remaining > 0
-                    backend.free(handle)
-                    sched.complete(slot)
+    def submit(self, request):
+        """Enqueue a request into the open session (feasibility-checked
+        against the cache backend's admission contract)."""
+        if self._sched is None:
+            raise RuntimeError("no open session; call begin() first")
+        self.backend.check_feasible(np.asarray(request.prompt).size,
+                                    request.sampling.max_tokens)
+        self._sched.submit(request)
+        if self._reg is not None:
+            self._reg.counter("serve_requests_total",
+                              "Requests submitted to serve()").inc()
 
-            active = sched.active
-            if not active:
-                nxt = sched.next_arrival
-                if nxt is None:
-                    break
-                now = max(now + 1, nxt)   # idle: jump to the next arrival
-                continue
+    @property
+    def has_work(self) -> bool:
+        return self._sched is not None and self._sched.has_work
 
+    def _admit(self) -> list:
+        """Admit every arrived request the backend has memory for;
+        returns the admitted uids (in admission order)."""
+        sched, backend = self._sched, self.backend
+        reg, tracer = self._reg, (self.obs.tracer
+                                  if self.obs is not None else None)
+        admitted = []
+        while True:
+            adm = sched.pop_admissible(
+                self._now, can_admit=lambda e: backend.can_admit(
+                    e.tokens().size))
+            if adm is None:
+                break
+            entry, slot = adm
+            req = entry.request
+            resumed = entry.resume is not None
+            tokens_np = entry.tokens()
+            handle = backend.alloc(req.uid, slot, tokens_np.size)
+            if tracer is not None:
+                tracer.event(req.uid, "admitted", n=tokens_np.size,
+                             pages_held=len(handle.pages), slot=slot,
+                             resumed=resumed)
+            if reg is not None:
+                reg.counter(
+                    "serve_admissions_total",
+                    "Requests admitted into a decode slot",
+                    labels=("resumed",)).inc(
+                    resumed="true" if resumed else "false")
+            logits = self._run_prefill(backend, handle, tokens_np)
+            if tracer is not None:
+                tracer.event(req.uid, "prefilled", n=tokens_np.size,
+                             pages_held=len(handle.pages), slot=slot)
+            if reg is not None:
+                reg.counter("serve_prefill_tokens_total",
+                            "Tokens run through prefill (resumes "
+                            "re-prefill prompt + generated)").inc(
+                    int(tokens_np.size))
+            self._n_admitted += 1
+            if entry.resume is None:
+                rng = make_rng(req.sampling, req.uid)
+                tok = self._sample_first(logits, req, req.uid, 0, rng)
+                st = SlotState(request=req, slot=slot,
+                               pos=int(tokens_np.size),
+                               remaining=req.sampling.max_tokens - 1,
+                               last_token=tok, out=[tok], rng=rng,
+                               order=self._n_admitted, handle=handle)
+            else:       # preempted request: continue its exact stream
+                st = entry.resume
+                tok = self._sample_first(logits, req, req.uid,
+                                         len(st.out), st.rng)
+                st.slot = slot
+                st.pos = int(tokens_np.size)
+                st.out.append(tok)
+                st.last_token = tok
+                st.remaining -= 1
+                st.order = self._n_admitted
+                st.handle = handle
+            if tracer is not None:
+                # first residency yields the request's first token;
+                # a resume's admission token is a decode step of its
+                # ongoing stream
+                tracer.event(req.uid,
+                             "decode" if resumed else "first_token",
+                             n=len(st.out),
+                             pages_held=len(handle.pages), slot=slot)
+            sched.activate(slot, st)
+            admitted.append(req.uid)
+            if st.remaining <= 0 or st.pos >= self.max_len:
+                st.truncated = st.remaining > 0
+                backend.free(handle)
+                sched.complete(slot)
+        return admitted
+
+    def step(self) -> StepResult:
+        """One admission + batched-decode round of the open session."""
+        if self._sched is None:
+            raise RuntimeError("no open session; call begin() first")
+        sched, backend = self._sched, self.backend
+        tracer = self.obs.tracer if self.obs is not None else None
+        fin0 = len(sched.finished)
+        admitted = self._admit()
+        # every admission yields one token (sampled from the prefill
+        # logits), so admitted uids are producers this step
+        produced = {}
+        for uid in admitted:
+            st = sched.finished.get(uid) or next(
+                (s for s in sched.active if s.request.uid == uid), None)
+            if st is not None:
+                produced[uid] = len(st.out)
+
+        active = sched.active
+        idle = False
+        if not active:
+            nxt = sched.next_arrival
+            if nxt is not None:
+                self._now = max(self._now + 1, nxt)   # jump to arrival
+            idle = True
+        else:
             # one batched decode step over the active slots
             next_toks = self._decode_active(active)
-            n_steps += 1
+            self._n_steps += 1
             survivors = []
             for st in active:
                 st.pos += 1
@@ -399,6 +460,7 @@ class InferenceServer:
                 st.out.append(tok)
                 st.last_token = tok
                 st.remaining -= 1
+                produced[st.request.uid] = len(st.out)
                 if tracer is not None:
                     tracer.event(st.request.uid, "decode", n=len(st.out),
                                  pages_held=len(st.handle.pages),
@@ -418,13 +480,60 @@ class InferenceServer:
             for st in survivors:
                 if sched.slots[st.slot] is st:   # not already preempted
                     self._append_or_preempt(sched, backend, st)
-            now += 1
+            self._now += 1
+        finished = list(sched.finished)[fin0:]
+        return StepResult(admitted=admitted, produced=produced,
+                          finished=finished, idle=idle)
 
+    def cancel(self, uid: int, reason: str = "cancelled"):
+        """Cancel a queued or in-flight request, freeing its cache pages
+        immediately (``memory_report()`` returns to its pre-admission
+        level).  ``reason`` is ``"cancelled"`` or ``"timeout"`` and
+        becomes the lifecycle terminal event.  Returns the tokens the
+        request had generated so far (possibly empty), or None if the
+        uid is not live in the session."""
+        if reason not in ("cancelled", "timeout"):
+            raise ValueError(f"cancel reason must be 'cancelled' or "
+                             f"'timeout', got {reason!r}")
+        if self._sched is None:
+            raise RuntimeError("no open session; call begin() first")
+        sched = self._sched
+        for st in sched.active:
+            if st.request.uid == uid:
+                self.backend.free(st.handle)   # before the event: the
+                break                          # trace shows pages_held=0
+        res = sched.cancel(uid, kind=reason)
+        if res is None:
+            return None
+        where, obj = res
+        if where == "pending":
+            out = obj.resume.out if obj.resume is not None else []
+        else:
+            out = obj.out
+        toks = np.asarray(out, np.int32)
+        self._cancelled[uid] = (reason, toks)
+        if self._reg is not None:
+            self._reg.counter(
+                "serve_cancelled_total",
+                "Requests removed by cancel(), by reason",
+                labels=("reason",)).inc(reason=reason)
+        return toks
+
+    def end(self) -> dict:
+        """Close the session: final stats + metrics publish; returns
+        ``{uid: np.ndarray(tokens)}`` for every finished request."""
+        sched = self._sched
+        if sched is None:
+            raise RuntimeError("no open session; call begin() first")
         gather_s, step_s, timed = self._step_timing
-        self.stats = {"decode_steps": n_steps, "admitted": n_admitted,
+        reasons = [r for r, _ in self._cancelled.values()]
+        self.stats = {"decode_steps": self._n_steps,
+                      "admitted": self._n_admitted,
                       "preemptions": sched.preemptions,
                       "generated": sum(len(s.out)
                                        for s in sched.finished.values()),
+                      "cancelled": reasons.count("cancelled"),
+                      "timeouts": reasons.count("timeout"),
                       # per-step decode latency split: assembling the
                       # step's inputs from the backend (gather + device
                       # tables) vs. running the jitted step itself
@@ -432,10 +541,51 @@ class InferenceServer:
                           gather_s / timed * 1e6, 2) if timed else 0.0,
                       "step_us_per_step": round(
                           step_s / timed * 1e6, 2) if timed else 0.0,
-                      "memory": backend.memory_report()}
-        backend.publish_metrics()
-        return {uid: np.asarray(s.out, np.int32)
-                for uid, s in sched.finished.items()}
+                      "memory": self.backend.memory_report()}
+        self.backend.publish_metrics()
+        out = {uid: np.asarray(s.out, np.int32)
+               for uid, s in sched.finished.items()}
+        self._sched = None
+        return out
+
+    def result(self, uid: int):
+        """Finished tokens for ``uid`` in the open session, else None."""
+        if self._sched is not None and uid in self._sched.finished:
+            return np.asarray(self._sched.finished[uid].out, np.int32)
+        return None
+
+    @property
+    def preemption_counts(self) -> dict:
+        """uid -> times preempted, for the open session."""
+        if self._sched is None:
+            return {}
+        return dict(self._sched.preempt_counts)
+
+    def load_report(self) -> dict:
+        """Queue/slot/page occupancy: what routers key off.  Cheap --
+        pure host-side bookkeeping, no device sync."""
+        if self._sched is not None:
+            load = self._sched.load()
+        else:
+            load = {"queued": 0, "active": 0,
+                    "queued_tokens": 0, "active_tokens": 0}
+        load["pages_in_use"] = int(
+            self.backend.memory_report().get("pages_in_use", 0))
+        return load
+
+    def serve(self, requests) -> dict:
+        """Run every request to completion with continuous batching.
+
+        Requests whose ``arrival > 0`` join the queue at that decode step
+        (streaming-arrivals mode); more requests than ``max_batch`` (or
+        than the page pool can hold at once -- the backend's admission
+        contract) simply queue for capacity.  Returns
+        ``{uid: np.ndarray(tokens)}``.
+        """
+        self.begin(requests)
+        while self.has_work:
+            self.step()
+        return self.end()
 
     def _run_prefill(self, backend, handle, tokens_np):
         """Fused full-sequence prefill; insert KV/SSM into the backend.

@@ -105,6 +105,7 @@ class Scheduler:
         self.pending: collections.deque[PendingEntry] = collections.deque()
         self.finished: dict[int, SlotState] = {}
         self.preemptions = 0
+        self.preempt_counts: dict[int, int] = {}   # uid -> times preempted
 
     # ------------------------------------------------------------- submit
     def submit(self, request: Request):
@@ -179,11 +180,40 @@ class Scheduler:
         self.slots[slot] = None
         self.pending.appendleft(PendingEntry(state.request, resume=state))
         self.preemptions += 1
+        uid = state.request.uid
+        self.preempt_counts[uid] = self.preempt_counts.get(uid, 0) + 1
         if self.tracer is not None:
             # the engine frees the victim's pages before preempting
-            self.tracer.event(state.request.uid, "preempted",
+            self.tracer.event(uid, "preempted",
                               n=len(state.out), pages_held=0, slot=slot)
         return state
+
+    def cancel(self, uid: int, kind: str = "cancelled"):
+        """Remove a queued or in-flight request.
+
+        Returns ``("pending", entry)`` if it was waiting in the queue,
+        ``("active", state)`` if it occupied a decode slot (the caller
+        -- the engine -- must have freed its cache handle already), or
+        None if the uid is not live.  Emits a ``kind`` lifecycle event
+        (``cancelled`` or ``timeout``)."""
+        if kind not in ("cancelled", "timeout"):
+            raise ValueError(f"cancel kind must be 'cancelled' or "
+                             f"'timeout', got {kind!r}")
+        for i, entry in enumerate(self.pending):
+            if entry.request.uid == uid:
+                del self.pending[i]
+                out = entry.resume.out if entry.resume is not None else []
+                if self.tracer is not None:
+                    self.tracer.event(uid, kind, n=len(out), pages_held=0)
+                return "pending", entry
+        for slot, state in enumerate(self.slots):
+            if state is not None and state.request.uid == uid:
+                self.slots[slot] = None
+                if self.tracer is not None:
+                    self.tracer.event(uid, kind, n=len(state.out),
+                                      pages_held=0, slot=slot)
+                return "active", state
+        return None
 
     # ------------------------------------------------------------ queries
     @property
@@ -199,3 +229,21 @@ class Scheduler:
         if not self.pending:
             return None
         return min(e.arrival for e in self.pending)
+
+    def load(self) -> dict:
+        """Queue/slot occupancy snapshot for routers and autoscalers.
+
+        ``*_tokens`` counts tokens still to generate, the unit the
+        fleet's queue-wait predictor works in."""
+        queued_tokens = 0
+        for e in self.pending:
+            if e.resume is not None:
+                queued_tokens += int(e.resume.remaining)
+            else:
+                queued_tokens += int(e.request.sampling.max_tokens)
+        return {
+            "queued": len(self.pending),
+            "active": len(self.active),
+            "queued_tokens": queued_tokens,
+            "active_tokens": sum(int(s.remaining) for s in self.active),
+        }

@@ -1,0 +1,378 @@
+"""Fleet subsystem tests: tier modeling, routing policies (round-robin
+parity, least-loaded balance, Pareto degrade + recovery), deadline
+admission with timeout-retry, preemption inside a fleet replica, the
+open-loop load generators, the SLO report, merged obs artifacts through
+the validator, and the pareto-vs-static overload headline the bench
+asserts."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import fleet as fleet_mod
+from repro import obs
+from repro.configs import registry
+from repro.launch.fleet import build_fleet, build_tier
+from repro.models import lm
+from repro.obs import validate as obs_validate
+from repro.serve import engine
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = registry.get("llama3.2-1b-smoke")
+    return cfg, lm.init_params(cfg, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def two_tier(llama):
+    """One float + one mixed-plan replica, reused across tests via
+    set_policy() (each run() opens fresh sessions on both engines)."""
+    cfg, params = llama
+    return build_fleet(cfg, params, ["float", "demo"],
+                       policy="round_robin", max_len=64, max_batch=2,
+                       cache="paged", page_size=8, pages=None,
+                       base_step_ms=8.0)
+
+
+def _trace(cfg, n, *, max_tokens=6, deadline_ms=None, rate=200.0,
+           seed=0, **kw):
+    return fleet_mod.poisson_trace(
+        n, rate_rps=rate, vocab=cfg.vocab, prompt_len=6,
+        max_tokens=max_tokens, deadline_ms=deadline_ms, seed=seed, **kw)
+
+
+def _solo(rep, request):
+    """The parity oracle: the landing replica's own engine serving the
+    request alone (token streams are batch/backend-invariant, so this is
+    the byte-identical reference for any fleet routing)."""
+    return rep.server.serve([request])[request.uid]
+
+
+# ---------------------------------------------------------------------------
+# tiers
+# ---------------------------------------------------------------------------
+
+class TestTiers:
+    def test_float_tier_is_16_bits_at_base_cost(self):
+        tier = fleet_mod.tier_from_plan("float", None, base_step_ms=8.0)
+        assert tier.quality == 16.0
+        assert tier.step_ms == pytest.approx(8.0)
+
+    def test_quantized_tiers_are_cheaper_and_ordered(self, llama):
+        cfg, params = llama
+        t8 = build_tier("w8", cfg, params, 8.0)
+        t2 = build_tier("w2", cfg, params, 8.0)
+        assert t8.quality == pytest.approx(8.0)
+        assert t2.quality == pytest.approx(2.0)
+        # cost model: fixed floor + bits-linear traffic term
+        assert 8.0 > t8.step_ms > t2.step_ms > 0.25 * 8.0
+        assert t8.step_ms == pytest.approx(8.0 * (0.25 + 0.75 * 0.5))
+
+    def test_mean_bits_counts_pruned_channels(self, llama):
+        cfg, params = llama
+        plan = engine.synthetic_plan(cfg, params, bits=None, seed=0)
+        bits = fleet_mod.plan_mean_bits(plan)
+        assert 0.0 < bits < 16.0       # mixed plan: some 0-bit channels
+
+    def test_duplicate_tier_names_rejected(self, llama):
+        cfg, params = llama
+        with pytest.raises(ValueError):
+            build_fleet(cfg, params, ["float", "float"],
+                        policy="round_robin", max_len=32, max_batch=1,
+                        cache="dense", page_size=8, pages=None,
+                        base_step_ms=8.0)
+
+
+# ---------------------------------------------------------------------------
+# routers
+# ---------------------------------------------------------------------------
+
+class TestRouters:
+    def test_make_router_rejects_unknown(self, two_tier):
+        with pytest.raises(ValueError):
+            fleet_mod.make_router("fastest_first", two_tier)
+        with pytest.raises(KeyError):
+            fleet_mod.make_router("static:nope", two_tier)
+
+    def test_round_robin_parity_and_full_drain(self, two_tier, llama):
+        cfg, _ = llama
+        two_tier.set_policy("round_robin")
+        trace = _trace(cfg, 6)
+        records = two_tier.run(trace)
+        assert len(records) == 6
+        assert all(r.status == "finished" for r in records.values())
+        # cyclic assignment across both tiers
+        tiers = [records[fr.uid].replica for fr in trace]
+        assert tiers == ["float", "demo"] * 3
+        # token parity: the fleet stream is byte-identical to a solo
+        # serve of the same request on the landing replica's engine
+        for fr in trace:
+            rec = records[fr.uid]
+            rep = two_tier.replica_by_name(rec.replica)
+            np.testing.assert_array_equal(rec.tokens,
+                                          _solo(rep, fr.request))
+
+    def test_least_loaded_parity_and_balance(self, two_tier, llama):
+        cfg, _ = llama
+        two_tier.set_policy("least_loaded")
+        # a synchronized burst: load-aware routing must spread it
+        trace = fleet_mod.burst_trace(1, 8, burst_every_ms=1.0,
+                                      vocab=cfg.vocab, prompt_len=6,
+                                      max_tokens=6)
+        records = two_tier.run(trace)
+        assert all(r.status == "finished" for r in records.values())
+        by_tier = {name: sum(r.replica == name
+                             for r in records.values())
+                   for name in ("float", "demo")}
+        assert by_tier["float"] == by_tier["demo"] == 4
+        for fr in trace:
+            rec = records[fr.uid]
+            rep = two_tier.replica_by_name(rec.replica)
+            np.testing.assert_array_equal(rec.tokens,
+                                          _solo(rep, fr.request))
+
+    def test_pareto_degrade_under_load_then_recovery(self, two_tier,
+                                                     llama):
+        cfg, _ = llama
+        two_tier.set_policy("pareto_degrade")
+        # low load, generous deadline: full quality, nothing degraded
+        records = two_tier.run(_trace(cfg, 2, rate=5.0,
+                                      deadline_ms=500.0))
+        assert all(r.replica == "float" and not r.degraded
+                   for r in records.values())
+        # a tight-deadline burst: the float tier's predicted queue wait
+        # blows the deadline for later arrivals, which slide down the
+        # Pareto front instead of missing
+        burst = fleet_mod.burst_trace(1, 8, burst_every_ms=1.0,
+                                      vocab=cfg.vocab, prompt_len=6,
+                                      max_tokens=6, deadline_ms=120.0)
+        records = two_tier.run(burst)
+        used = {r.replica for r in records.values() if r.replica}
+        assert "demo" in used          # degrade engaged
+        assert any(r.degraded for r in records.values())
+        # recovery: with the backlog drained, deadline-carrying requests
+        # ride the top tier again
+        records = two_tier.run(_trace(cfg, 2, rate=5.0,
+                                      deadline_ms=500.0, seed=3))
+        assert all(r.replica == "float" and not r.degraded
+                   for r in records.values())
+
+    def test_pareto_sheds_when_hopeless(self, two_tier, llama):
+        cfg, _ = llama
+        two_tier.set_policy("pareto_degrade")
+        # even the cheapest tier needs ~6 steps for 6 tokens: a 1 ms
+        # deadline is infeasible everywhere -> shed at routing
+        records = two_tier.run(_trace(cfg, 2, deadline_ms=1.0))
+        assert all(r.status == "shed" for r in records.values())
+        assert all(r.tokens is None for r in records.values())
+        snap = two_tier.metrics_snapshot()["metrics"]
+        (serie,) = snap["fleet_shed_total"]["series"]
+        assert serie["value"] >= 2.0
+
+
+# ---------------------------------------------------------------------------
+# deadlines, retries, preemption
+# ---------------------------------------------------------------------------
+
+class TestDeadlines:
+    def test_timeout_retry_lands_elsewhere_with_parity(self, two_tier,
+                                                       llama):
+        """max_batch=2 x 2 replicas, 5 simultaneous arrivals: the 5th
+        queues behind a full fleet, times out in queue (deadline 40 ms
+        < the ~48 ms drain), and its retry must re-route, finish, and
+        stream byte-identically -- while the SLO verdict still judges
+        the ORIGINAL promise (a late retry is a miss, not a met)."""
+        cfg, _ = llama
+        two_tier.set_policy("round_robin")
+        sp = SamplingParams(max_tokens=6)
+        rng = np.random.default_rng(7)
+        mk = lambda uid: Request(
+            uid=uid, sampling=sp,
+            prompt=rng.integers(0, cfg.vocab, size=6).astype(np.int32))
+        trace = [fleet_mod.FleetRequest(request=mk(uid))
+                 for uid in range(4)]
+        victim = fleet_mod.FleetRequest(request=mk(4), deadline_ms=40.0,
+                                        retry_budget=1)
+        records = two_tier.run(trace + [victim])
+        rec = records[4]
+        assert rec.status == "finished"
+        assert rec.fr.retries_used == 1
+        assert [a.cause for a in rec.attempts] == ["arrival",
+                                                   "retry:timeout"]
+        # attempt deadlines refresh on retry, the SLA does not
+        assert rec.sla_deadline_abs == pytest.approx(40.0)
+        assert rec.finish_ms > rec.sla_deadline_abs
+        assert not rec.deadline_met
+        rep = two_tier.replica_by_name(rec.replica)
+        np.testing.assert_array_equal(rec.tokens, _solo(rep, rec.fr.request))
+        # the timeout cancellation is visible in the shared registry
+        snap = two_tier.metrics_snapshot()["metrics"]
+        assert any(s["value"] >= 1.0
+                   for s in snap["fleet_timeouts_total"]["series"])
+
+    def test_exhausted_retry_budget_is_terminal(self, two_tier, llama):
+        cfg, _ = llama
+        two_tier.set_policy("round_robin")
+        # deadline shorter than any possible service time: every attempt
+        # times out, the budget runs dry, the request ends 'timeout'
+        trace = _trace(cfg, 3, deadline_ms=10.0, retry_budget=1)
+        records = two_tier.run(trace)
+        assert all(r.status == "timeout" for r in records.values())
+        assert all(r.fr.retries_used == 1 for r in records.values())
+        assert all(not r.deadline_met for r in records.values())
+
+    def test_preemption_inside_a_replica_keeps_parity(self, llama):
+        """A page pool too small for the whole batch forces preemption
+        inside the fleet replica; with budget to spare the request rides
+        it out and the stream still matches the solo oracle."""
+        cfg, params = llama
+        flt = build_fleet(cfg, params, ["float"], policy="round_robin",
+                          max_len=32, max_batch=2, cache="paged",
+                          page_size=4, pages=7, base_step_ms=8.0)
+        sp = SamplingParams(max_tokens=8)
+        rng = np.random.default_rng(3)
+        trace = [fleet_mod.FleetRequest(
+            request=Request(uid=i, sampling=sp,
+                            prompt=rng.integers(0, cfg.vocab, size=6)
+                            .astype(np.int32)),
+            preempt_budget=10)
+            for i in range(2)]
+        records = flt.run(trace)
+        rep = flt.replicas[0]
+        assert rep.server.stats["preemptions"] > 0
+        assert all(r.status == "finished" for r in records.values())
+        for rec in records.values():
+            np.testing.assert_array_equal(rec.tokens,
+                                          _solo(rep, rec.fr.request))
+
+    def test_preempt_budget_eviction_retries(self, llama):
+        """preempt_budget=0: the first preemption evicts (cancelled +
+        freed pages) and the retry budget re-dispatches."""
+        cfg, params = llama
+        flt = build_fleet(cfg, params, ["float"], policy="round_robin",
+                          max_len=32, max_batch=2, cache="paged",
+                          page_size=4, pages=7, base_step_ms=8.0)
+        sp = SamplingParams(max_tokens=8)
+        rng = np.random.default_rng(3)
+        trace = [fleet_mod.FleetRequest(
+            request=Request(uid=i, sampling=sp,
+                            prompt=rng.integers(0, cfg.vocab, size=6)
+                            .astype(np.int32)),
+            preempt_budget=0, retry_budget=2)
+            for i in range(2)]
+        records = flt.run(trace)
+        assert all(r.status == "finished" for r in records.values())
+        assert sum(r.fr.retries_used for r in records.values()) >= 1
+        causes = [a.cause for r in records.values() for a in r.attempts]
+        assert "retry:preempt" in causes
+        snap = flt.metrics_snapshot()["metrics"]
+        assert any(s["value"] >= 1.0
+                   for s in snap["fleet_cancelled_total"]["series"])
+
+
+# ---------------------------------------------------------------------------
+# load generation + SLO report
+# ---------------------------------------------------------------------------
+
+class TestLoadgen:
+    def test_poisson_trace_deterministic_and_open_loop(self):
+        a = fleet_mod.poisson_trace(6, rate_rps=100.0, vocab=64, seed=5)
+        b = fleet_mod.poisson_trace(6, rate_rps=100.0, vocab=64, seed=5)
+        assert [fr.arrival_ms for fr in a] == [fr.arrival_ms for fr in b]
+        for fa, fb in zip(a, b):
+            np.testing.assert_array_equal(fa.request.prompt,
+                                          fb.request.prompt)
+        c = fleet_mod.poisson_trace(6, rate_rps=100.0, vocab=64, seed=6)
+        assert [fr.arrival_ms for fr in a] != [fr.arrival_ms for fr in c]
+        arr = [fr.arrival_ms for fr in a]
+        assert arr == sorted(arr) and arr[0] > 0.0
+        with pytest.raises(ValueError):
+            fleet_mod.poisson_trace(3, rate_rps=0.0, vocab=64)
+
+    def test_burst_trace_shape(self):
+        t = fleet_mod.burst_trace(3, 4, burst_every_ms=50.0, vocab=64)
+        assert len(t) == 12
+        assert [fr.arrival_ms for fr in t] == sum(
+            [[50.0 * b] * 4 for b in range(3)], [])
+        assert len({fr.uid for fr in t}) == 12
+
+    def test_slo_report_counts(self, two_tier, llama):
+        cfg, _ = llama
+        two_tier.set_policy("round_robin")
+        records = two_tier.run(_trace(cfg, 4, deadline_ms=1000.0))
+        rep = fleet_mod.slo_report(two_tier, records)
+        assert rep["requests"] == 4
+        assert rep["status"]["finished"] == 4
+        assert rep["deadline_attainment"] == 1.0
+        assert rep["ttft_ms"]["p50"] is not None
+        per = rep["per_tier"]
+        assert per["float"]["requests"] + per["demo"]["requests"] == 4
+        assert per["float"]["deadline_attainment"] == 1.0
+
+    def test_duplicate_uids_rejected(self, two_tier, llama):
+        cfg, _ = llama
+        t = _trace(cfg, 2)
+        t2 = _trace(cfg, 2)            # same uids
+        with pytest.raises(ValueError):
+            two_tier.run(t + t2)
+
+
+# ---------------------------------------------------------------------------
+# observability through the fleet
+# ---------------------------------------------------------------------------
+
+class TestFleetObs:
+    def test_merged_trace_and_metrics_validate(self, two_tier, llama,
+                                               tmp_path):
+        cfg, _ = llama
+        two_tier.set_policy("round_robin")
+        records = two_tier.run(_trace(cfg, 5, deadline_ms=1000.0))
+        assert all(r.status == "finished" for r in records.values())
+        evs = two_tier.trace_events()
+        # globally ordered, replica-tagged, one complete lifecycle per
+        # uid within its replica's event stream
+        assert all(e1["t"] <= e2["t"] for e1, e2 in zip(evs, evs[1:]))
+        assert {e["replica"] for e in evs} == {"float", "demo"}
+        for uid in {e["uid"] for e in evs}:
+            kinds = [e["kind"] for e in evs if e["uid"] == uid]
+            assert obs.RequestTracer.check_lifecycle(kinds) is None
+        mpath, tpath = tmp_path / "f.prom", tmp_path / "f.jsonl"
+        obs.write_prometheus(two_tier.registry, str(mpath))
+        two_tier.write_trace(str(tpath))
+        assert obs_validate.validate_files(
+            str(mpath), str(tpath), "tests/obs_schema.json") == []
+        # per-replica queue series live in the one shared registry
+        snap = two_tier.registry.snapshot()
+        reps = {s["labels"]["replica"]
+                for s in snap["serve_queue_depth"]["series"]}
+        assert reps == {"float", "demo"}
+
+    def test_timeout_terminal_in_trace(self, two_tier, llama):
+        cfg, _ = llama
+        two_tier.set_policy("round_robin")
+        two_tier.run(_trace(cfg, 2, deadline_ms=10.0, retry_budget=0))
+        kinds = {e["kind"] for e in two_tier.trace_events()}
+        assert "timeout" in kinds and "finished" not in kinds
+
+
+# ---------------------------------------------------------------------------
+# the bench's headline: pareto_degrade beats static single-tier
+# ---------------------------------------------------------------------------
+
+class TestParetoHeadline:
+    def test_pareto_beats_static_float_under_overload(self, two_tier,
+                                                      llama):
+        cfg, _ = llama
+        mk = lambda: fleet_mod.burst_trace(
+            1, 10, burst_every_ms=1.0, vocab=cfg.vocab, prompt_len=6,
+            max_tokens=6, deadline_ms=120.0, seed=1)
+        atts = {}
+        for policy in ("static:float", "pareto_degrade"):
+            two_tier.set_policy(policy)
+            report = fleet_mod.slo_report(two_tier, two_tier.run(mk()))
+            atts[policy] = report["deadline_attainment"]
+        assert atts["pareto_degrade"] > atts["static:float"]

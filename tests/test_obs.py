@@ -183,6 +183,67 @@ class TestTracer:
                       "preempted", "admitted", "prefilled", "decode",
                       "finished"]) is None
 
+    def test_episode_grammar_terminals(self):
+        """timeout/cancelled terminals: may strike a queued, resident or
+        preempted request, and a struck uid may be re-enqueued (the
+        fleet's retry path) as a fresh episode; finished stays final."""
+        check = obs.RequestTracer.check_lifecycle
+        assert check(["enqueued", "cancelled"]) is None
+        assert check(["enqueued", "timeout"]) is None
+        assert check(["enqueued", "admitted", "prefilled", "first_token",
+                      "decode", "timeout"]) is None      # mid-decode
+        assert check(["enqueued", "admitted", "prefilled", "first_token",
+                      "preempted", "cancelled"]) is None  # while evicted
+        # retry episodes: timeout in queue, then a clean second episode
+        assert check(["enqueued", "timeout",
+                      "enqueued", "admitted", "prefilled", "first_token",
+                      "decode", "finished"]) is None
+        assert check(["enqueued", "cancelled", "enqueued",
+                      "timeout"]) is None
+        # finished must be the uid's last event overall
+        assert check(["enqueued", "admitted", "prefilled", "first_token",
+                      "finished", "enqueued", "cancelled"]) is not None
+        # finished requires a residency; terminals don't chain
+        assert check(["enqueued", "finished"]) is not None
+        assert check(["enqueued", "admitted", "prefilled", "first_token",
+                      "preempted", "finished"]) is not None
+        assert check(["enqueued", "timeout", "admitted", "prefilled",
+                      "first_token", "finished"]) is not None  # no re-enq
+        assert check(["enqueued", "timeout", "cancelled"]) is not None
+
+    def test_queue_depth_gauge_and_wait_histogram(self):
+        reg = obs.MetricsRegistry()
+        tr = obs.RequestTracer(reg, replica="r0")
+        g = reg.gauge("serve_queue_depth", labels=("replica",))
+        h = reg.histogram("serve_queue_wait_seconds",
+                          labels=("replica",))
+        tr.event(0, "enqueued", n=4)
+        tr.event(1, "enqueued", n=4)
+        assert g.value(replica="r0") == 2.0
+        tr.event(0, "admitted", n=4, slot=0)
+        assert g.value(replica="r0") == 1.0
+        assert h.count(replica="r0") == 1     # enqueued -> admitted
+        tr.event(1, "cancelled", n=0)         # cancellation leaves queue
+        assert g.value(replica="r0") == 0.0
+        # a preemption re-enters the queue; its wait is measured from
+        # the preemption, not the original enqueue
+        tr.event(0, "prefilled", n=4, slot=0)
+        tr.event(0, "first_token", n=1, slot=0)
+        tr.event(0, "preempted", n=1, slot=0)
+        assert g.value(replica="r0") == 1.0
+        tr.event(0, "admitted", n=5, slot=0)
+        assert g.value(replica="r0") == 0.0
+        assert h.count(replica="r0") == 2
+        assert len(tr.queue_waits()) == 2
+        assert all(w >= 0.0 for w in tr.queue_waits())
+
+    def test_solo_servers_use_empty_replica_label(self):
+        reg = obs.MetricsRegistry()
+        tr = obs.RequestTracer(reg)
+        tr.event(0, "enqueued", n=1)
+        assert reg.gauge("serve_queue_depth",
+                         labels=("replica",)).value(replica="") == 1.0
+
     def test_unknown_kind_raises(self):
         with pytest.raises(ValueError):
             obs.RequestTracer().event(0, "teleported")

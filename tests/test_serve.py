@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import proptest as pt
 from repro.configs import registry
 from repro.launch import steps
 from repro.models import lm
@@ -133,6 +134,99 @@ class TestScheduler:
         sched.submit(self._req(1))
         with pytest.raises(ValueError):     # duplicate uid
             sched.submit(self._req(1))
+
+    def test_cancel_pending_and_active(self):
+        sched = Scheduler(max_batch=1, max_len=32)
+        for uid in range(3):
+            sched.submit(self._req(uid))
+        e0, s0 = sched.pop_admissible(0)
+        sched.activate(s0, _dummy_state(e0, s0))
+        where, state = sched.cancel(0, kind="timeout")
+        assert where == "active" and state.request.uid == 0
+        assert sched.slots[s0] is None       # slot freed immediately
+        where, entry = sched.cancel(2)
+        assert where == "pending" and entry.request.uid == 2
+        assert sched.cancel(0) is None       # no longer live
+        assert sched.cancel(99) is None      # never existed
+        with pytest.raises(ValueError):
+            sched.cancel(1, kind="vanished")
+        # uid 1 is the only survivor and admits next
+        entry, _ = sched.pop_admissible(0)
+        assert entry.request.uid == 1
+
+    def test_load_counts_remaining_tokens(self):
+        sched = Scheduler(max_batch=2, max_len=32)
+        sched.submit(self._req(0, max_tokens=4))
+        sched.submit(self._req(1, max_tokens=6))
+        e0, s0 = sched.pop_admissible(0)
+        st = _dummy_state(e0, s0)
+        sched.activate(s0, st)
+        load = sched.load()
+        assert load == {"queued": 1, "active": 1,
+                        "queued_tokens": 6, "active_tokens": 4}
+        st.remaining = 1                     # 3 tokens decoded
+        sched.preempt(s0)
+        load = sched.load()                  # resume carries remaining=1
+        assert load == {"queued": 2, "active": 0,
+                        "queued_tokens": 7, "active_tokens": 0}
+
+    @pt.given(seed=pt.integers(0, 10**9), max_batch=pt.integers(1, 3),
+              n_req=pt.integers(4, 9))
+    def test_fcfs_property_under_mixed_ops(self, seed, max_batch, n_req):
+        """Strict FCFS survives any interleaving of admissions,
+        completions, preemptions, cancellations and timeouts: each
+        admission must pop the model queue's exact head (preempted
+        requests re-admit from the FRONT, fresh ones in submit order,
+        cancelled ones never), and load() mirrors the model throughout.
+        Complements the trace-replay FRONT-order check in test_obs."""
+        rng = np.random.default_rng(seed)
+        sched = Scheduler(max_batch=max_batch, max_len=32)
+        for uid in range(n_req):
+            sched.submit(self._req(uid))
+        queue = [uid for uid in range(n_req)]     # model: exact order
+        active: dict[int, object] = {}            # slot -> uid
+        done = set()
+        for _ in range(60):
+            if not queue and not active:
+                break
+            op = rng.choice(["admit", "complete", "preempt", "cancel"])
+            if op == "admit":
+                res = sched.pop_admissible(0)
+                if len(active) == max_batch or not queue:
+                    assert res is None
+                    continue
+                entry, slot = res
+                assert entry.request.uid == queue[0], \
+                    f"admitted {entry.request.uid}, head was {queue}"
+                queue.pop(0)
+                st = _dummy_state(entry, slot)
+                sched.activate(slot, st)
+                active[slot] = st
+            elif op == "complete" and active:
+                slot = int(rng.choice(list(active)))
+                done.add(active.pop(slot).request.uid)
+                sched.complete(slot)
+            elif op == "preempt" and active:
+                slot = int(rng.choice(list(active)))
+                st = active.pop(slot)
+                assert sched.preempt(slot) is st
+                queue.insert(0, st.request.uid)   # FRONT re-admission
+            elif op == "cancel" and (queue or active):
+                live = queue + [st.request.uid for st in active.values()]
+                uid = int(rng.choice(live))
+                kind = str(rng.choice(["cancelled", "timeout"]))
+                where, _ = sched.cancel(uid, kind=kind)
+                if uid in queue:
+                    assert where == "pending"
+                    queue.remove(uid)
+                else:
+                    assert where == "active"
+                    active = {s: st for s, st in active.items()
+                              if st.request.uid != uid}
+            load = sched.load()
+            assert load["queued"] == len(queue)
+            assert load["active"] == len(active)
+        assert set(sched.finished) == done
 
 
 def _dummy_state(entry, slot):
@@ -288,6 +382,100 @@ class TestContinuousBatching:
         cfg = registry.get("seamless-m4t-medium-smoke")
         with pytest.raises(NotImplementedError):
             engine.InferenceServer(cfg, params=None)
+
+
+# ---------------------------------------------------------------------------
+# request cancellation (the session API)
+# ---------------------------------------------------------------------------
+
+class TestCancellation:
+    def _server(self, llama, **kw):
+        cfg, params = llama
+        kw.setdefault("max_len", 32)
+        kw.setdefault("max_batch", 2)
+        return engine.InferenceServer(cfg, params, cache="paged",
+                                      page_size=4, pages=24, **kw)
+
+    def _reqs(self, cfg, n, max_tokens=6):
+        rng = np.random.default_rng(2)
+        sp = SamplingParams(max_tokens=max_tokens)
+        return [Request(uid=i, sampling=sp,
+                        prompt=rng.integers(0, cfg.vocab, size=6)
+                        .astype(np.int32))
+                for i in range(n)]
+
+    def test_cancel_queued_request(self, llama):
+        cfg, _ = llama
+        server = self._server(llama, max_batch=1)
+        reqs = self._reqs(cfg, 2)
+        server.begin(reqs)
+        server.step()                       # uid 0 admitted, uid 1 queued
+        toks = server.cancel(1)
+        assert toks is not None and toks.size == 0   # nothing generated
+        while server.has_work:
+            server.step()
+        out = server.end()
+        assert set(out) == {0}
+        assert server.stats["cancelled"] == 1
+        assert server.stats["timeouts"] == 0
+
+    def test_cancel_inflight_frees_pages_to_baseline(self, llama):
+        """The leak check: cancelling an in-flight request frees its
+        cache pages immediately, and the backend returns to its
+        pre-admission baseline -- while the surviving request's stream
+        stays byte-identical to a solo run."""
+        cfg, _ = llama
+        server = self._server(llama)
+        reqs = self._reqs(cfg, 2)
+        server.begin(reqs)
+        assert server.backend.memory_report()["pages_in_use"] == 0
+        server.step()                       # both admitted
+        server.step()                       # a couple of decode steps
+        held = server.backend.memory_report()["pages_in_use"]
+        assert held > 0
+        toks = server.cancel(1, reason="timeout")
+        assert 0 < toks.size < reqs[1].sampling.max_tokens  # partial
+        after = server.backend.memory_report()["pages_in_use"]
+        assert after < held                 # pages freed right away
+        while server.has_work:
+            server.step()
+        out = server.end()
+        assert server.backend.memory_report()["pages_in_use"] == 0
+        assert server.stats["timeouts"] == 1
+        solo = server.serve([reqs[0]])
+        np.testing.assert_array_equal(out[0], solo[0])
+
+    def test_cancel_everything_restores_baseline_immediately(self, llama):
+        cfg, _ = llama
+        server = self._server(llama)
+        reqs = self._reqs(cfg, 3)           # 2 active + 1 queued
+        server.begin(reqs)
+        server.step()
+        for uid in range(3):
+            server.cancel(uid)
+        assert server.backend.memory_report()["pages_in_use"] == 0
+        assert not server.has_work
+        out = server.end()
+        assert out == {}
+        assert server.stats["cancelled"] == 3
+
+    def test_cancel_validation_and_result(self, llama):
+        cfg, _ = llama
+        server = self._server(llama)
+        reqs = self._reqs(cfg, 1, max_tokens=3)
+        server.begin(reqs)
+        with pytest.raises(ValueError):
+            server.cancel(0, reason="evaporated")
+        assert server.cancel(7) is None     # unknown uid
+        assert server.result(0) is None     # not finished yet
+        while server.has_work:
+            server.step()
+        toks = server.result(0)
+        assert toks is not None and toks.size == 3
+        assert server.cancel(0) is None     # finished: not cancellable
+        server.end()
+        with pytest.raises(RuntimeError):   # session closed
+            server.cancel(0)
 
 
 # ---------------------------------------------------------------------------
