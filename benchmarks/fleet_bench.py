@@ -28,8 +28,9 @@ from repro.configs import registry
 from repro.models import lm
 from repro import fleet as fleet_mod
 from repro.launch.fleet import build_fleet
+from benchmarks.serve_bench import machine_baseline
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 POLICIES = ("static:float", "round_robin", "least_loaded",
             "pareto_degrade")
@@ -101,7 +102,14 @@ def main(argv=None):
             max_tokens=args.tokens, deadline_ms=args.deadline_ms,
             seed=args.seed)
 
-    results = []
+    # calibration first: fleet latency is virtual-clock (machine
+    # independent), but wall-clock runtime of this script is not -- the
+    # fixed-work row lets cross-PR runtime deltas be divided by host
+    # speed, same convention as BENCH_serve.json.
+    base = machine_baseline()
+    print(f"fleet/machine_baseline,wall_s={base['wall_s']},"
+          f"gflops={base['matmul_gflops']}")
+    results = [base]
     for policy in POLICIES:
         row = run_policy(flt, policy, poisson)
         row["trace"] = "poisson"
@@ -122,7 +130,8 @@ def main(argv=None):
               f"timeouts={row['status']['timeout']},"
               f"degraded={row['degraded']}")
 
-    by = {(r["policy"], r["trace"]): r for r in results}
+    by = {(r["policy"], r["trace"]): r for r in results
+          if "policy" in r}
     static_att = by[("static:float", "poisson")]["deadline_attainment"]
     pareto_att = by[("pareto_degrade", "poisson")]["deadline_attainment"]
     # the acceptance criterion: the Pareto-aware policy must beat the

@@ -1,0 +1,189 @@
+"""Sweep orchestration benchmark: warm-start continuation vs. cold
+restarts on the same lambda schedule.
+
+Two identical sweeps (same bench, same lambda grid, same seeds, same
+per-point search budget) trace the accuracy-vs-size front of the gsc
+reference network -- one with warm-start continuation (each point
+initializes weights and gate logits from its predecessor's finished
+state and skips the warmup phase), one restarting every point from
+scratch.  The headline acceptance number is the warm sweep reaching an
+iso-quality front in fewer total search steps; the script asserts both
+halves (fewer steps AND no front-quality loss beyond a small
+tolerance).
+
+Also emits the paper-style iso-accuracy size-reduction report against
+fixed 8-bit and 2-bit baselines (the abstract's 47.50% / 69.54%
+framing, at smoke scale) and the host-speed ``machine_baseline``
+calibration row shared with BENCH_serve / BENCH_fleet.
+
+    PYTHONPATH=src python -m benchmarks.sweep_bench [--out BENCH_sweep.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+
+from repro import sweep as sweep_mod
+from benchmarks.serve_bench import machine_baseline
+
+SCHEMA_VERSION = 1
+
+
+def run_sweep(spec, root):
+    store = sweep_mod.PlanStore(os.path.join(root, spec.name, "store"))
+    runner = sweep_mod.SweepRunner(
+        spec, store, os.path.join(root, spec.name, "work"))
+    summary = runner.run()
+    front = store.front(store.query(kind="point", sweep=spec.name),
+                        cost_key=spec.cost_model)
+    return runner, store, summary, front
+
+
+def front_rows(front, cost_model):
+    return [{"name": e["name"], "lam": e["lineage"]["lam"],
+             "score": round(e["metrics"]["score"], 6),
+             "cost": round(e["costs"][cost_model], 3),
+             "plan": e["plan"]} for e in front]
+
+
+def best_score_at_or_below(front, cost, cost_tol):
+    """Front quality probe: best score among points no costlier than
+    ``cost * (1 + cost_tol)`` (front rows are cost-ascending)."""
+    lim = cost * (1.0 + cost_tol) + 1e-9
+    scores = [e["metrics"]["score"] for e in front
+              if e["costs"]["size"] <= lim]
+    return max(scores) if scores else None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="gsc")
+    ap.add_argument("--lams", default="2,8,24")
+    ap.add_argument("--warmup-steps", type=int, default=40)
+    ap.add_argument("--search-steps", type=int, default=40)
+    ap.add_argument("--finetune-steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--warm-search-steps", type=int, default=None,
+                    help="search budget of warm-started points "
+                         "(default: the full --search-steps; the warm "
+                         "savings then come from the skipped warmup)")
+    ap.add_argument("--score-tol", type=float, default=0.02,
+                    help="max accuracy the warm front may give up at "
+                         "iso cost and still count as iso-quality")
+    ap.add_argument("--cost-tol", type=float, default=0.05,
+                    help="relative cost slack when matching warm front "
+                         "points to cold front costs")
+    ap.add_argument("--workdir", default=None,
+                    help="keep sweep artifacts here instead of a "
+                         "temporary directory")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    args = ap.parse_args(argv)
+
+    base = machine_baseline()
+    print(f"sweep/machine_baseline,wall_s={base['wall_s']},"
+          f"gflops={base['matmul_gflops']}")
+
+    lams = tuple(float(x) for x in args.lams.split(",") if x)
+    common = dict(track="cnn", bench=args.bench, lams=lams,
+                  warmup_steps=args.warmup_steps,
+                  search_steps=args.search_steps,
+                  finetune_steps=args.finetune_steps,
+                  batch=args.batch, width=args.width, seed=args.seed)
+    root = args.workdir or tempfile.mkdtemp(prefix="sweep_bench_")
+
+    warm_spec = sweep_mod.SweepSpec(
+        name="warm", warm_start=True,
+        warm_search_steps=args.warm_search_steps or args.search_steps,
+        **common)
+    cold_spec = sweep_mod.SweepSpec(name="cold", warm_start=False,
+                                    **common)
+    runner_w, store_w, sum_w, front_w = run_sweep(warm_spec, root)
+    _, _, sum_c, front_c = run_sweep(cold_spec, root)
+
+    for tag, s in (("warm", sum_w), ("cold", sum_c)):
+        print(f"sweep/{tag},points={len(s['points'])},"
+              f"steps={s['steps_executed']},saved={s['steps_saved']}")
+
+    # headline half 1: warm continuation spends strictly fewer total
+    # search steps over the same lambda schedule
+    assert sum_w["steps_executed"] < sum_c["steps_executed"], (
+        f"warm sweep ran {sum_w['steps_executed']} steps, cold ran "
+        f"{sum_c['steps_executed']}; warm must be cheaper")
+
+    # headline half 2: iso quality -- at every cold front point's cost,
+    # the warm front offers a score within --score-tol
+    quality = []
+    worst_gap = 0.0
+    for e in front_c:
+        cost = e["costs"]["size"]
+        cold_s = e["metrics"]["score"]
+        warm_s = best_score_at_or_below(front_w, cost, args.cost_tol)
+        gap = cold_s - warm_s if warm_s is not None else float("inf")
+        worst_gap = max(worst_gap, gap)
+        quality.append({"cost": round(cost, 3),
+                        "cold_score": round(cold_s, 6),
+                        "warm_score": None if warm_s is None
+                        else round(warm_s, 6),
+                        "gap": None if warm_s is None
+                        else round(gap, 6)})
+    assert worst_gap <= args.score_tol, (
+        f"warm front gives up {worst_gap:.4f} accuracy at iso cost "
+        f"(tolerance {args.score_tol})")
+    print(f"sweep/headline,warm_steps={sum_w['steps_executed']},"
+          f"cold_steps={sum_c['steps_executed']},"
+          f"worst_iso_gap={round(worst_gap, 6)}")
+
+    # paper-style framing: iso-accuracy size reduction of the warm
+    # front vs. fixed 8-bit / 2-bit references (abstract: 47.50% /
+    # 69.54% on the full benchmarks; smoke scale here)
+    for bits in (8, 2):
+        runner_w.baseline(bits)
+    iso = runner_w.iso_report(baseline_bits=(8, 2))
+    for label, row in iso.items():
+        print(f"sweep/iso,{label},reduction_pct={row['reduction_pct']},"
+              f"baseline_score={round(row['baseline_score'], 4)}")
+
+    report = {
+        "benchmark": "sweep",
+        "schema_version": SCHEMA_VERSION,
+        "backend": jax.default_backend(),
+        "machine_baseline": base,
+        "config": {"bench": args.bench, "lams": list(lams),
+                   "warmup_steps": args.warmup_steps,
+                   "search_steps": args.search_steps,
+                   "finetune_steps": args.finetune_steps,
+                   "warm_search_steps": warm_spec.warm_search(),
+                   "batch": args.batch, "width": args.width,
+                   "seed": args.seed, "score_tol": args.score_tol,
+                   "cost_tol": args.cost_tol},
+        "warm": {"steps_executed": sum_w["steps_executed"],
+                 "steps_saved": sum_w["steps_saved"],
+                 "front": front_rows(front_w, "size")},
+        "cold": {"steps_executed": sum_c["steps_executed"],
+                 "steps_saved": sum_c["steps_saved"],
+                 "front": front_rows(front_c, "size")},
+        "iso_quality": quality,
+        "iso_accuracy_report": iso,
+        "headline": {
+            "warm_steps": sum_w["steps_executed"],
+            "cold_steps": sum_c["steps_executed"],
+            "steps_saved_pct": round(
+                100.0 * (1 - sum_w["steps_executed"]
+                         / sum_c["steps_executed"]), 2),
+            "worst_iso_quality_gap": round(worst_gap, 6),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[sweep_bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,27 +1,33 @@
-"""Pareto sweep (paper Fig. 4/6) on the composable API: run the joint
-search at several regularization strengths, print the accuracy-vs-cost
-front, and export the best model's deployment plan (Fig. 3 reordering +
-per-precision sub-layers + NE16 refinement) straight from its
-CompressionPlan.
+"""Pareto sweep (paper Fig. 4/6) on the repro.sweep orchestrator: run
+the joint search at several regularization strengths with warm-start
+continuation, persist every point into a durable PlanStore, print the
+accuracy-vs-cost front, and export the best model's deployment plan
+(Fig. 3 reordering + per-precision sub-layers + NE16 refinement)
+straight from its stored CompressionPlan.
+
+Because the points live in a PlanStore, the sweep is resumable (rerun
+the same command after a kill and finished points load instead of
+retraining) and the store serves directly:
+
+    PYTHONPATH=src python examples/compress_pareto.py --bench gsc \
+        --store pareto_store
+    # then, for an lm-track store:  python -m repro.launch.fleet \
+    #     --tiers store:pareto_store
 
 Also demonstrates registering a custom cost model by name: pass
 ``--cost sram4k`` to optimize a size model that prices every byte of a
 layer beyond a 4 kB per-layer SRAM tile 8x higher.
-
-    PYTHONPATH=src python examples/compress_pareto.py --bench gsc
 """
 import argparse
+import os
+import tempfile
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro import api
+from repro import api, sweep
 from repro.core import costs, discretize
-from repro.data import synthetic
 from repro.models import cnn
-
-BENCH = {"cifar10": (cnn.resnet9, synthetic.CIFAR10_LIKE),
-         "gsc": (cnn.dscnn, synthetic.GSC_LIKE)}
 
 
 class SramTileCost:
@@ -49,38 +55,61 @@ api.register_cost_model(SramTileCost())
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--bench", default="gsc", choices=list(BENCH))
+    ap.add_argument("--bench", default="gsc",
+                    choices=list(sweep.available_benches()))
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--cost", default="size",
                     choices=list(api.available_cost_models()))
     ap.add_argument("--lams", default="2,8,20")
+    ap.add_argument("--adaptive", type=int, default=0,
+                    help="extra bisection points in the largest front "
+                         "gaps")
+    ap.add_argument("--cold", action="store_true",
+                    help="restart every point from scratch instead of "
+                         "warm-start continuation")
+    ap.add_argument("--store", default=None,
+                    help="PlanStore directory (default: a temp dir; "
+                         "pass a path to make the sweep resumable)")
     args = ap.parse_args()
-    builder, spec = BENCH[args.bench]
-    g = builder(width=8)
-    geoms = cnn.cost_geoms(g)
-    comp = api.Compressor(g, spec, pw=(0, 2, 4, 8), px=(8,), batch=32)
 
-    front = []
-    for lam in [float(x) for x in args.lams.split(",")]:
-        res = comp.run([
-            api.Warmup(steps=args.steps),
-            api.JointSearch(steps=args.steps, lam=lam,
-                            cost_model=args.cost,
-                            ne16_refine=(args.cost == "ne16")),
-            api.Finetune(steps=args.steps // 2)])
-        front.append((lam, res))
-        print(f"lambda={lam:6.1f}: acc={res.acc_final:.3f} "
-              f"size={res.size_bytes/1024:7.2f} kB "
-              f"pruned={100*res.prune_fraction:4.1f}%")
+    root = args.store or tempfile.mkdtemp(prefix="pareto_")
+    spec = sweep.SweepSpec(
+        name="pareto", track="cnn", bench=args.bench,
+        cost_model=args.cost,
+        lams=tuple(float(x) for x in args.lams.split(",")),
+        adaptive_points=args.adaptive, warm_start=not args.cold,
+        warmup_steps=args.steps, search_steps=args.steps,
+        finetune_steps=args.steps // 2, batch=32)
+    store = sweep.PlanStore(os.path.join(root, "store"))
+    runner = sweep.SweepRunner(spec, store,
+                               os.path.join(root, "work"))
+    summary = runner.run()
+    print(f"\n{summary['executed']} points trained, "
+          f"{summary['loaded']} loaded from {store.root}, "
+          f"{summary['steps_saved']} steps saved by warm starts")
 
-    # export the most accurate compressed model's deployment plan
-    best = max(front, key=lambda t: (t[1].acc_final, -t[1].size_bytes))[1]
-    plan = best.plan
-    print("\ndeployment plan (Fig. 3: per-precision sub-layers after "
-          "channel reordering):")
+    front = store.front(store.query(kind="point", sweep=spec.name),
+                        cost_key=args.cost)
+    print("accuracy-vs-cost front (cost ascending):")
+    for e in front:
+        m, lin = e["metrics"], e["lineage"]
+        print(f"  lambda={lin['lam']:6.1f}: acc={m['score']:.3f} "
+              f"cost={e['costs'][args.cost]/1024:7.2f} kB "
+              f"pruned={100*m['prune_fraction']:4.1f}%  "
+              f"[{e['name']} @ {e['plan'][:12]}]")
+
+    # export the most accurate front point's deployment plan, reloaded
+    # from the content-addressed store (provenance round-trip)
+    best = max(front, key=lambda e: (e["metrics"]["score"],
+                                     -e["costs"][args.cost]))
+    plan = store.get(best["plan"])
+    print(f"\ndeployment plan of {best['name']} (Fig. 3: per-precision "
+          "sub-layers after channel reordering):")
     for grp, segs in plan.sublayer_split().items():
         desc = ", ".join(f"{b}-bit x{stop-start}" for b, start, stop in segs)
         print(f"  {grp:6s} -> [{desc}]")
+    g, _ = sweep.runner._BENCHES[args.bench](spec.width)
+    geoms = cnn.cost_geoms(g)
     refined, promoted = discretize.ne16_refine(
         geoms, {"gamma": {k: np.asarray(v)
                           for k, v in plan.channel_bits.items()},

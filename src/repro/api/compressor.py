@@ -52,6 +52,11 @@ class CompressionResult:
     timings: dict
     metrics: dict
     total_s: float
+    # warm-start handoff surface (repro.sweep): the post-search BN-folded
+    # net and final selection parameters, so the next point of a Pareto
+    # sweep can continue from this one's finished state
+    folded: Any = None
+    mps_params: Any = None
 
     def as_legacy_dict(self) -> dict:
         """The result dict shape of the deprecated ``run_pipeline``."""
@@ -166,7 +171,8 @@ class Compressor:
             acc_float=state.acc_float, acc_final=state.acc_final,
             size_bytes=size_bytes, prune_fraction=prune_frac,
             bits_histogram=hist, timings=dict(state.timings),
-            metrics=dict(state.metrics), total_s=total_s)
+            metrics=dict(state.metrics), total_s=total_s,
+            folded=state.folded, mps_params=state.mps_params)
 
     # -------------------------------------------------------------- resume
     def _try_resume(self, manager, phases, state):
@@ -240,6 +246,9 @@ class Compressor:
             carry["net"] = self._folded_template()
         if meta.get("has_plan"):
             carry["plan"] = self._plan_template()
+        if meta.get("has_mps"):
+            carry["mps"] = cnn.init_mps_params(self.graph, self.pw,
+                                               self.px)
         return carry
 
     def _apply_carry(self, state, carry, meta):
@@ -247,6 +256,7 @@ class Compressor:
         # checkpoint must not leak state into the fallback attempt
         state.folded = carry.get("folded")
         state.net = carry.get("net")
+        state.mps_params = carry.get("mps")
         state.plan = CompressionPlan.from_tree(
             carry["plan"], meta["plan_scalars"]) if "plan" in carry else None
         state.acc_float = float(meta["acc_float"]) \
@@ -282,6 +292,11 @@ class _CheckpointSaver(phases_mod.Hook):
             carry["net"] = state.net
         if state.plan is not None:
             carry["plan"] = state.plan.to_tree()
+        if state.mps_params is not None:
+            # the sweep's warm-start handoff rides on the final selection
+            # parameters: carry them so a run resumed past JointSearch
+            # still reports them in CompressionResult.mps_params
+            carry["mps"] = state.mps_params
         return carry
 
     def _meta(self, state, phase_index: int, phase_step: int,
@@ -293,6 +308,7 @@ class _CheckpointSaver(phases_mod.Hook):
             "has_folded": state.folded is not None,
             "has_net": state.net is not None,
             "has_plan": state.plan is not None,
+            "has_mps": state.mps_params is not None,
             "plan_scalars": state.plan.scalars()
             if state.plan is not None else None,
             "acc_float": state.acc_float,

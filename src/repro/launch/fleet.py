@@ -11,16 +11,26 @@ Pareto-aware router, deadline admission and an open-loop load trace.
         --tiers float,w8,mixed,w2 --policy pareto_degrade \
         --trace-kind burst --metrics fleet.prom --trace fleet.jsonl
 
-Tier specs (comma-separated): ``float`` (no plan), ``demo`` /
-``mixed`` (seeded random mixed-precision plan), ``w<bits>`` (uniform
-``bits`` everywhere), or a CompressionPlan stem/path.  Every replica
-runs the same arch/params; latency is the fleet's deterministic
-virtual clock (see ``repro.fleet.fleet``), token content is real.
+Tier specs (comma-separated), in plan-source order:
+
+* ``store:<dir>`` -- every Pareto-front entry of a ``repro.sweep``
+  PlanStore becomes one tier (named after its entry);
+* ``store:<dir>/<name>`` -- one named store entry;
+* a CompressionPlan stem/path (``plan`` / ``plan.npz`` / ``plan.json``);
+* ``float`` (no plan), ``w<bits>`` (uniform synthetic plan), and
+  ``demo`` / ``mixed`` (seeded random synthetic plan) -- the fallback
+  grammar for demos without a real search behind them.
+
+Every replica runs the same arch/params; latency is the fleet's
+deterministic virtual clock (see ``repro.fleet.fleet``), token content
+is real.  Store tiers must hold lm-track plans for the served arch
+(``engine.apply_plan`` raises on group mismatch).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import jax
 
@@ -30,8 +40,36 @@ from repro.serve import engine
 from repro import fleet as fleet_mod
 
 
-def build_tier(spec: str, cfg, params, base_step_ms: float):
-    """Tier spec -> TierSpec (see module docstring for the grammar)."""
+def _store_tiers(ref: str, base_step_ms: float):
+    """``store:`` tier source: ``ref`` is a PlanStore root (-> one tier
+    per Pareto-front entry) or ``<root>/<entry-name>`` (-> one tier)."""
+    from repro.sweep import PlanStore, StoreError
+
+    def is_store(path: str) -> bool:
+        return os.path.isdir(os.path.join(path, "entries"))
+
+    if is_store(ref):
+        store, name = PlanStore(ref), None
+    elif "/" in ref and is_store(ref.rsplit("/", 1)[0]):
+        root, name = ref.rsplit("/", 1)
+        store = PlanStore(root)
+    else:
+        raise StoreError(f"store:{ref}: {ref!r} is not a PlanStore root "
+                         f"(no entries/ directory) or <root>/<name>")
+    entries = [store.entry(name)] if name is not None else \
+        store.front(store.query(kind="point") or None)
+    if not entries:
+        raise StoreError(f"store:{ref}: the store has no entries")
+    return [fleet_mod.tier_from_plan(e["name"], store.get(e["plan"]),
+                                     base_step_ms=base_step_ms)
+            for e in entries]
+
+
+def build_tiers(spec: str, cfg, params, base_step_ms: float):
+    """Tier spec -> list of TierSpec (``store:<dir>`` may expand to
+    several; every other form yields exactly one)."""
+    if spec.startswith("store:"):
+        return _store_tiers(spec[len("store:"):], base_step_ms)
     if spec == "float":
         plan = None
     elif spec in ("demo", "mixed"):
@@ -41,8 +79,18 @@ def build_tier(spec: str, cfg, params, base_step_ms: float):
     else:
         from repro.api.plan import CompressionPlan
         plan = CompressionPlan.load(spec)
-    return fleet_mod.tier_from_plan(spec, plan,
-                                    base_step_ms=base_step_ms)
+    return [fleet_mod.tier_from_plan(spec, plan,
+                                     base_step_ms=base_step_ms)]
+
+
+def build_tier(spec: str, cfg, params, base_step_ms: float):
+    """Tier spec -> one TierSpec (see module docstring for the grammar;
+    rejects ``store:<dir>`` specs that expand to several tiers)."""
+    tiers = build_tiers(spec, cfg, params, base_step_ms)
+    if len(tiers) != 1:
+        raise ValueError(f"tier spec {spec!r} expands to {len(tiers)} "
+                         f"tiers; use build_tiers()")
+    return tiers[0]
 
 
 def build_fleet(cfg, params, tier_specs, *, policy: str,
@@ -51,12 +99,12 @@ def build_fleet(cfg, params, tier_specs, *, policy: str,
                 metrics: bool = True) -> fleet_mod.Fleet:
     pairs = []
     for spec in tier_specs:
-        tier = build_tier(spec, cfg, params, base_step_ms)
-        server = engine.InferenceServer(
-            cfg, params, plan=tier.plan, max_len=max_len,
-            max_batch=max_batch, cache=cache, page_size=page_size,
-            pages=pages)
-        pairs.append((tier, server))
+        for tier in build_tiers(spec, cfg, params, base_step_ms):
+            server = engine.InferenceServer(
+                cfg, params, plan=tier.plan, max_len=max_len,
+                max_batch=max_batch, cache=cache, page_size=page_size,
+                pages=pages)
+            pairs.append((tier, server))
     return fleet_mod.Fleet(pairs, policy=policy, metrics=metrics)
 
 
@@ -64,8 +112,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b-smoke")
     ap.add_argument("--tiers", default="float,demo",
-                    help="comma-separated tier specs: float, demo/mixed, "
-                         "w<bits>, or a CompressionPlan stem/path")
+                    help="comma-separated tier specs: store:<dir> (whole "
+                         "front) or store:<dir>/<name>, a CompressionPlan "
+                         "stem/path, float, w<bits>, demo/mixed")
     ap.add_argument("--policy", default="pareto_degrade",
                     help="round_robin | least_loaded | pareto_degrade | "
                          "static:<tier>")

@@ -32,10 +32,19 @@ import time
 from dataclasses import dataclass, field
 
 EVENT_KINDS = ("enqueued", "admitted", "prefilled", "first_token",
-               "decode", "preempted", "finished", "timeout", "cancelled")
+               "decode", "preempted", "finished", "timeout", "cancelled",
+               # sweep-point lifecycle (repro.sweep): a search point is
+               # enqueued, then either loaded from the plan store or
+               # started (warm or cold) and finished into the store
+               "point_enqueued", "point_started", "point_loaded",
+               "point_finished")
 # events that end a residency episode for a uid (a timeout/cancelled uid
 # may be re-enqueued by the fleet's retry path; finished is final)
 TERMINAL_KINDS = ("finished", "timeout", "cancelled")
+# the sweep-point subset: a uid uses either the serve grammar or the
+# sweep grammar, never a mix
+SWEEP_KINDS = ("point_enqueued", "point_started", "point_loaded",
+               "point_finished")
 
 
 @dataclass
@@ -108,6 +117,16 @@ class RequestTracer:
                         slot=None if slot is None else int(slot),
                         extra=extra)
         self.events.append(ev)
+
+        if kind in SWEEP_KINDS:
+            # sweep points carry none of the serve-side queue/latency
+            # semantics: record the event and count it, nothing else
+            if self.registry is not None:
+                self.registry.counter(
+                    "sweep_trace_events_total",
+                    "Sweep-point lifecycle events recorded",
+                    labels=("kind",)).inc(kind=kind)
+            return ev
 
         if kind == "enqueued":
             self._enq_t[ev.uid] = t
@@ -253,6 +272,8 @@ class RequestTracer:
         kinds = list(kinds)
         if not kinds:
             return "empty trace"
+        if any(k in SWEEP_KINDS for k in kinds):
+            return RequestTracer._check_sweep_lifecycle(kinds)
         i, n = 0, len(kinds)
         while i < n:
             if kinds[i] != "enqueued":
@@ -307,3 +328,27 @@ class RequestTracer:
             # cancelled/timeout: any further events must be a fresh
             # episode (the outer loop re-expects 'enqueued')
         return None
+
+    @staticmethod
+    def _check_sweep_lifecycle(kinds) -> str | None:
+        """Sweep-point grammar (one point per uid)::
+
+            POINT := point_enqueued
+                     (point_loaded | point_started point_finished?)?
+
+        A bare ``point_enqueued`` (optionally followed by a bare
+        ``point_started``) is a point still pending/in flight when the
+        trace was written -- e.g. a sweep stopped by its ``max_points``
+        execution budget; ``point_loaded`` (a store hit) and
+        ``point_finished`` are terminal.
+        """
+        bad = [k for k in kinds if k not in SWEEP_KINDS]
+        if bad:
+            return f"sweep point mixes serve events: {bad[0]!r}"
+        if kinds[0] != "point_enqueued":
+            return f"event 0: expected 'point_enqueued', got {kinds[0]!r}"
+        rest = kinds[1:]
+        if rest in ([], ["point_loaded"], ["point_started"],
+                    ["point_started", "point_finished"]):
+            return None
+        return f"invalid sweep-point sequence {kinds!r}"

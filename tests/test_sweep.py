@@ -1,0 +1,509 @@
+"""Sweep subsystem tests: the content-addressed PlanStore (round-trips,
+dedup, every failure path), front maintenance + adaptive bisection math,
+SweepSpec validation/identity, warm-start cnn sweeps with obs artifacts
+through the validator, kill/resume byte-identity of the store (the
+acceptance criterion), lm-track sweeps feeding the serving fleet via
+``store:`` tiers, and plan provenance round-trips."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro import fleet as fleet_mod
+from repro import obs
+from repro import sweep
+from repro.configs import registry as configs_registry
+from repro.launch.fleet import build_fleet, build_tier, build_tiers
+from repro.models import lm
+from repro.obs import validate as obs_validate
+from repro.obs.tracing import RequestTracer
+from repro.serve import engine
+from repro.sweep import front as front_mod
+
+SCHEMA = os.path.join(os.path.dirname(__file__), "obs_schema.json")
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = configs_registry.get("llama3.2-1b-smoke")
+    return cfg, lm.init_params(cfg, jax.random.key(0))
+
+
+def cnn_spec(**kw):
+    base = dict(name="t", track="cnn", bench="gsc", lams=(2.0, 12.0),
+                adaptive_points=1, warmup_steps=4, search_steps=4,
+                finetune_steps=2, batch=8, width=4, eval_batches=2,
+                checkpoint_every=2)
+    base.update(kw)
+    return sweep.SweepSpec(**base)
+
+
+def lm_spec(**kw):
+    base = dict(name="lt", track="lm", bench="llama3.2-1b-smoke",
+                lams=(0.5, 4.0), warmup_steps=1, search_steps=4,
+                finetune_steps=0, batch=4, seq=16, eval_batches=2,
+                checkpoint_every=1)
+    base.update(kw)
+    return sweep.SweepSpec(**base)
+
+
+def run_sweep(spec, root, hooks=(), max_points=None, with_obs=False):
+    ob = obs.Observability() if with_obs else None
+    store = sweep.PlanStore(os.path.join(root, "store"))
+    runner = sweep.SweepRunner(
+        spec, store, os.path.join(root, "work"), verbose=False,
+        registry=ob.registry if ob else None,
+        tracer=ob.tracer if ob else None)
+    summary = runner.run(max_points=max_points, hooks=hooks)
+    return runner, store, summary, ob
+
+
+def store_fingerprint(store):
+    """Everything the byte-identity acceptance criterion compares: the
+    exact bytes of every entry JSON, the set of plan hashes, and the
+    front (entry names in cost order)."""
+    entries = {}
+    for name in store.names():
+        with open(store._entry_path(name), "rb") as f:
+            entries[name] = f.read()
+    plans = sorted(e["plan"] for e in store.entries())
+    front = [e["name"] for e in store.front()]
+    return entries, plans, front
+
+
+@pytest.fixture(scope="module")
+def cnn_ref(tmp_path_factory):
+    """Uninterrupted reference cnn sweep (warm-start, obs on)."""
+    root = tmp_path_factory.mktemp("cnn_ref")
+    return run_sweep(cnn_spec(), str(root), with_obs=True)
+
+
+@pytest.fixture(scope="module")
+def lm_ref(tmp_path_factory):
+    """Uninterrupted reference lm sweep."""
+    root = tmp_path_factory.mktemp("lm_ref")
+    return run_sweep(lm_spec(), str(root))
+
+
+# ---------------------------------------------------------------------------
+# PlanStore
+# ---------------------------------------------------------------------------
+
+class TestPlanStore:
+    @pytest.fixture()
+    def plans(self, llama):
+        cfg, params = llama
+        return (engine.synthetic_plan(cfg, params, bits=8),
+                engine.synthetic_plan(cfg, params, bits=None, seed=3))
+
+    def test_round_trip_and_dedup(self, tmp_path, plans):
+        p8, pmix = plans
+        store = sweep.PlanStore(str(tmp_path))
+        e = store.put(p8, "a", metrics={"score": 0.5},
+                      costs={"size": 100.0}, lineage={"lam": 1.0})
+        assert e["plan"] == sweep.plan_hash(p8)
+        assert store.load("a").equals(p8)
+        # meta is provenance, not content: the same assignment under a
+        # different name shares one plan file
+        store.put(p8, "b", metrics={"score": 0.4}, costs={"size": 100.0})
+        assert len(os.listdir(store.plans_dir)) == 2  # one .npz + .json
+        store.put(pmix, "c", metrics={"score": 0.3},
+                  costs={"size": 60.0})
+        assert store.names() == ["a", "b", "c"]
+        assert store.has("a") and not store.has("zz")
+        assert store.verify() == []
+
+    def test_query_and_front(self, tmp_path, plans):
+        p8, pmix = plans
+        store = sweep.PlanStore(str(tmp_path))
+        store.put(p8, "hi", metrics={"score": 0.9},
+                  costs={"size": 100.0}, lineage={"kind": "point",
+                                                  "lam": 1.0})
+        store.put(pmix, "lo", metrics={"score": 0.6},
+                  costs={"size": 50.0}, lineage={"kind": "point",
+                                                 "lam": 8.0})
+        store.put(p8, "ref", metrics={"score": 0.8},
+                  costs={"size": 100.0}, lineage={"kind": "baseline"})
+        assert [e["name"] for e in store.query(kind="point")] \
+            == ["hi", "lo"]
+        assert [e["name"] for e in store.query(lam=8.0)] == ["lo"]
+        assert store.query(kind="nope") == []
+        fr = store.front(store.query(kind="point"))
+        assert [e["name"] for e in fr] == ["lo", "hi"]  # cost ascending
+
+    def test_invalid_name(self, tmp_path, plans):
+        store = sweep.PlanStore(str(tmp_path))
+        with pytest.raises(sweep.StoreError, match="invalid entry name"):
+            store.put(plans[0], "a/b")
+        with pytest.raises(sweep.StoreError, match="no entry"):
+            store.entry("missing")
+        with pytest.raises(sweep.StoreError, match="no plan"):
+            store.get("feedbeef")
+
+    def test_missing_npz_beside_json(self, tmp_path, plans):
+        store = sweep.PlanStore(str(tmp_path))
+        e = store.put(plans[0], "a", costs={"size": 1.0})
+        os.unlink(os.path.join(store.plans_dir, e["plan"] + ".npz"))
+        with pytest.raises(sweep.StoreError,
+                           match=r"missing its \.npz"):
+            store.load("a")
+        assert any("missing its .npz" in p for p in store.verify())
+
+    def test_truncated_npz(self, tmp_path, plans):
+        store = sweep.PlanStore(str(tmp_path))
+        e = store.put(plans[0], "a", costs={"size": 1.0})
+        path = os.path.join(store.plans_dir, e["plan"] + ".npz")
+        with open(path, "r+b") as f:
+            f.truncate(os.path.getsize(path) // 2)
+        with pytest.raises(sweep.StoreError,
+                           match="corrupt or truncated"):
+            store.load("a")
+
+    def test_corrupt_entry_json(self, tmp_path, plans):
+        store = sweep.PlanStore(str(tmp_path))
+        store.put(plans[0], "a", costs={"size": 1.0})
+        with open(store._entry_path("a"), "w") as f:
+            f.write("{not json")
+        with pytest.raises(sweep.StoreError, match="corrupt"):
+            store.entry("a")
+        # valid JSON but missing required fields is also corrupt
+        with open(store._entry_path("a"), "w") as f:
+            json.dump({"name": "a"}, f)
+        with pytest.raises(sweep.StoreError, match="missing field"):
+            store.entry("a")
+
+    def test_content_hash_mismatch(self, tmp_path, plans):
+        p8, pmix = plans
+        store = sweep.PlanStore(str(tmp_path))
+        e8 = store.put(p8, "a", costs={"size": 1.0})
+        em = store.put(pmix, "b", costs={"size": 1.0})
+        # swap b's arrays in under a's hash: content no longer matches
+        for ext in (".npz", ".json"):
+            os.replace(os.path.join(store.plans_dir, em["plan"] + ext),
+                       os.path.join(store.plans_dir, e8["plan"] + ext))
+        with pytest.raises(sweep.StoreError,
+                           match="content-hash check"):
+            store.load("a")
+
+    def test_entry_bytes_deterministic(self, tmp_path, plans):
+        """put() twice -> byte-identical entry file (no timestamps,
+        sorted keys): the foundation of the resume byte-identity."""
+        store = sweep.PlanStore(str(tmp_path))
+        kw = dict(metrics={"score": 0.5}, costs={"size": 9.0},
+                  lineage={"lam": 2.0, "parent": None})
+        store.put(plans[0], "a", **kw)
+        with open(store._entry_path("a"), "rb") as f:
+            first = f.read()
+        store.put(plans[0], "a", **kw)
+        with open(store._entry_path("a"), "rb") as f:
+            assert f.read() == first
+
+
+# ---------------------------------------------------------------------------
+# front math
+# ---------------------------------------------------------------------------
+
+class TestFront:
+    PTS = [{"score": 0.9, "cost": 100.0, "lam": 1.0},
+           {"score": 0.8, "cost": 60.0, "lam": 4.0},
+           {"score": 0.7, "cost": 90.0, "lam": 2.0},   # dominated
+           {"score": 0.5, "cost": 20.0, "lam": 16.0}]
+
+    def test_dominates(self):
+        a, b = self.PTS[1], self.PTS[2]
+        assert front_mod.dominates(a, b)
+        assert not front_mod.dominates(b, a)
+        assert not front_mod.dominates(a, a)
+
+    def test_pareto_front(self):
+        fr = front_mod.pareto_front(self.PTS)
+        assert [p["lam"] for p in fr] == [16.0, 4.0, 1.0]
+        # exact duplicates collapse
+        fr2 = front_mod.pareto_front(self.PTS + [dict(self.PTS[0])])
+        assert len(fr2) == 3
+
+    def test_largest_gap_and_next_lambda(self):
+        fr = front_mod.pareto_front(self.PTS)
+        i, gap = front_mod.largest_gap(fr)
+        assert 0 <= i < len(fr) - 1 and gap > 0
+        lam = front_mod.next_lambda(fr)
+        la, lb = fr[i]["lam"], fr[i + 1]["lam"]
+        assert lam == pytest.approx((la * lb) ** 0.5)
+        assert front_mod.next_lambda(fr[:1]) is None
+        # a collapsed front (identical lambdas) yields nothing new
+        same = [{"score": 0.5, "cost": 10.0, "lam": 2.0},
+                {"score": 0.9, "cost": 90.0, "lam": 2.0}]
+        assert front_mod.next_lambda(same) is None
+
+    def test_iso_accuracy(self):
+        fr = front_mod.pareto_front(self.PTS)
+        # baseline at acc 0.75 / 100 bytes: cheapest front point at
+        # >= 0.75 is cost 60 -> 40% reduction
+        red = front_mod.iso_accuracy_reduction(fr, 0.75, 100.0)
+        assert red == pytest.approx(0.40)
+        assert front_mod.iso_accuracy_reduction(fr, 0.99, 100.0) is None
+        rep = front_mod.iso_accuracy_report(fr, {"w8": (0.75, 100.0)})
+        assert rep["w8"]["reduction_pct"] == pytest.approx(40.0)
+
+
+# ---------------------------------------------------------------------------
+# SweepSpec
+# ---------------------------------------------------------------------------
+
+class TestSweepSpec:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="track"):
+            sweep.SweepSpec(track="rnn")
+        with pytest.raises(ValueError, match="lams"):
+            sweep.SweepSpec(lams=())
+        with pytest.raises(ValueError, match="search_steps"):
+            sweep.SweepSpec(search_steps=0)
+        with pytest.raises(ValueError, match="cost_model"):
+            sweep.SweepSpec(track="lm", cost_model="ne16")
+
+    def test_identity(self):
+        a = cnn_spec()
+        b = sweep.SweepSpec.from_json(a.to_json())
+        assert a == b and a.spec_hash() == b.spec_hash()
+        assert a.spec_hash() != cnn_spec(search_steps=5).spec_hash()
+        assert cnn_spec(warm_search_steps=None).warm_search() == 2
+        assert cnn_spec(warm_search_steps=3).warm_search() == 3
+
+
+# ---------------------------------------------------------------------------
+# cnn sweeps: warm start, resume, byte-identity, baselines, obs
+# ---------------------------------------------------------------------------
+
+class TestCnnSweep:
+    def test_summary_and_lineage(self, cnn_ref):
+        runner, store, summary, _ = cnn_ref
+        assert summary["executed"] >= 2 and summary["loaded"] == 0
+        assert summary["complete"]
+        assert summary["steps_saved"] > 0          # warm starts paid off
+        entries = store.query(kind="point", sweep="t")
+        assert len(entries) == summary["executed"]
+        by_name = {e["name"]: e for e in entries}
+        p0, p1 = by_name["t.pt00"], by_name["t.pt01"]
+        assert not p0["lineage"]["warm"] and p0["lineage"]["parent"] is None
+        assert p1["lineage"]["warm"]
+        assert p1["lineage"]["parent"] == p0["plan"]   # continuation chain
+        assert p1["lineage"]["saved"] == 4 + 2         # warmup + search/2
+        assert store.verify() == []
+        assert len(store.front()) >= 1
+
+    def test_obs_artifacts(self, cnn_ref, tmp_path):
+        _, _, summary, ob = cnn_ref
+        mpath, tpath = str(tmp_path / "s.prom"), str(tmp_path / "s.jsonl")
+        obs.write_prometheus(ob.registry, mpath)
+        obs.write_trace(ob.tracer, tpath)
+        assert obs_validate.validate_files(mpath, tpath, SCHEMA) == []
+        text = open(mpath).read()
+        assert 'sweep_points_completed_total{source="run"}' in text
+        assert "sweep_warm_starts_total" in text
+        assert "sweep_search_steps_total" in text
+        assert "sweep_front_size" in text
+
+    def test_store_resume_is_free_and_identical(self, cnn_ref, tmp_path):
+        runner, store, summary, _ = cnn_ref
+        before = store_fingerprint(store)
+        runner2 = sweep.SweepRunner(
+            runner.spec, store,
+            os.path.join(str(tmp_path), "other_work"), verbose=False)
+        s2 = runner2.run()
+        assert s2["executed"] == 0
+        assert s2["loaded"] == summary["executed"]
+        assert s2["points"] == summary["points"]
+        assert store_fingerprint(store) == before
+
+    def test_spec_mismatch_guard(self, cnn_ref, tmp_path):
+        _, store, _, _ = cnn_ref
+        other = sweep.SweepRunner(
+            cnn_spec(search_steps=5), store,
+            os.path.join(str(tmp_path), "w"), verbose=False)
+        with pytest.raises(sweep.StoreError,
+                           match="different SweepSpec"):
+            other.run()
+
+    def test_kill_resume_byte_identical(self, cnn_ref, tmp_path):
+        """The acceptance criterion: kill mid-point, resume, and the
+        final store is byte-identical (entry bytes, plan hashes, front)
+        to the uninterrupted run's."""
+        _, ref_store, _, _ = cnn_ref
+
+        class Boom(api.Hook):
+            def __init__(self):
+                self.finetunes, self.armed = 0, True
+
+            def on_phase_start(self, phase, state):
+                if phase.name == "finetune":
+                    self.finetunes += 1
+
+            def on_step(self, phase, state, step, metrics, train_state):
+                if self.armed and phase.name == "finetune" \
+                        and self.finetunes == 2:
+                    self.armed = False
+                    raise RuntimeError("boom")
+
+        root = str(tmp_path / "killed")
+        with pytest.raises(RuntimeError, match="boom"):
+            run_sweep(cnn_spec(), root, hooks=(Boom(),))
+        killed = sweep.PlanStore(os.path.join(root, "store"))
+        assert killed.names() == ["t.pt00"]        # pt01 died in flight
+        # resume against the same store+workdir: pt00 loads, pt01
+        # restarts from its checkpoint mid-point
+        _, store, s2, _ = run_sweep(cnn_spec(), root)
+        assert s2["loaded"] == 1 and s2["executed"] >= 1
+        assert store_fingerprint(store) == store_fingerprint(ref_store)
+
+    def test_max_points_budget(self, tmp_path):
+        root = str(tmp_path)
+        _, store, s1, _ = run_sweep(cnn_spec(adaptive_points=0), root,
+                                    max_points=1)
+        assert s1["executed"] == 1 and not s1["complete"]
+        assert store.names() == ["t.pt00"]
+        _, store, s2, _ = run_sweep(cnn_spec(adaptive_points=0), root)
+        assert s2["loaded"] == 1 and s2["executed"] == 1
+        assert s2["complete"]
+
+    def test_baselines_and_iso_report(self, cnn_ref):
+        runner, store, _, _ = cnn_ref
+        for bits in (8, 2):
+            runner.baseline(bits)
+        e8 = store.entry("t.w8ref")
+        assert e8["lineage"]["kind"] == "baseline"
+        assert e8["lineage"]["bits"] == 8
+        # a fixed 8-bit reference quantizes nothing away: its plan is
+        # all-8-bit, so it must cost more than the 2-bit one
+        assert e8["costs"]["size"] > store.entry("t.w2ref")["costs"]["size"]
+        rep = runner.iso_report(baseline_bits=(8, 2))
+        for label in ("w8", "w2"):
+            assert {"baseline_score", "baseline_cost",
+                    "reduction", "reduction_pct"} <= set(rep[label])
+
+    def test_missing_handoff_message(self, tmp_path):
+        runner = sweep.SweepRunner(
+            cnn_spec(), sweep.PlanStore(str(tmp_path / "s")),
+            str(tmp_path / "w"), verbose=False)
+        with pytest.raises(sweep.StoreError, match="warm start"):
+            runner._load_handoff(0, {"x": np.zeros(1)})
+
+
+# ---------------------------------------------------------------------------
+# lm track: sweeps the fleet can serve
+# ---------------------------------------------------------------------------
+
+class TestLmSweep:
+    def test_summary_and_plans_bind(self, lm_ref, llama):
+        _, store, summary, _ = lm_ref
+        cfg, params = llama
+        assert summary["executed"] == 2 and summary["complete"]
+        for e in store.query(kind="point"):
+            plan = store.get(e["plan"])
+            # strict bind: the plan covers exactly the arch's servable
+            # weight groups, and apply_plan accepts it
+            assert set(plan.channel_bits) \
+                == set(lm.serve_weight_groups(cfg, params))
+            engine.apply_plan(cfg, params, plan)
+            assert e["costs"]["size"] > 0
+        assert store.verify() == []
+
+    def test_kill_resume_byte_identical(self, lm_ref, tmp_path):
+        _, ref_store, _, _ = lm_ref
+
+        class Boom(api.Hook):
+            def __init__(self):
+                self.armed = True
+
+            def on_step(self, phase, state, step, metrics, train_state):
+                if self.armed and phase.name == "lm_search" and step == 2:
+                    self.armed = False
+                    raise RuntimeError("boom")
+
+        root = str(tmp_path)
+        with pytest.raises(RuntimeError, match="boom"):
+            run_sweep(lm_spec(), root, hooks=(Boom(),))
+        # pt00 died at step 2 with a step-1 checkpoint behind it
+        _, store, s2, _ = run_sweep(lm_spec(), root)
+        assert s2["executed"] == 2 and s2["loaded"] == 0
+        assert store_fingerprint(store) == store_fingerprint(ref_store)
+
+    def test_fleet_store_tiers(self, lm_ref, llama):
+        _, store, _, _ = lm_ref
+        cfg, params = llama
+        tiers = build_tiers(f"store:{store.root}", cfg, params, 8.0)
+        front = store.front(store.query(kind="point"))
+        assert [t.name for t in tiers] == [e["name"] for e in front]
+        for t in tiers:
+            assert 0 < t.quality <= 16.0 and t.step_ms <= 8.0
+        # single-entry form
+        name = front[0]["name"]
+        only = build_tier(f"store:{store.root}/{name}", cfg, params, 8.0)
+        assert only.name == name and only.quality == tiers[0].quality
+        if len(tiers) > 1:
+            with pytest.raises(ValueError, match="expands to"):
+                build_tier(f"store:{store.root}", cfg, params, 8.0)
+        # and the fleet serves them end to end
+        flt = build_fleet(cfg, params, ["float", f"store:{store.root}"],
+                          policy="round_robin", max_len=32, max_batch=2,
+                          cache="paged", page_size=8, pages=None,
+                          base_step_ms=8.0)
+        assert len(flt.replicas) == 1 + len(tiers)
+        trace = fleet_mod.poisson_trace(
+            3, rate_rps=100.0, vocab=cfg.vocab, prompt_len=4,
+            max_tokens=3, deadline_ms=None, seed=0)
+        records = flt.run(trace)
+        assert all(r.status == "finished" for r in records.values())
+
+    def test_store_tier_errors(self, llama, tmp_path):
+        cfg, params = llama
+        with pytest.raises(sweep.StoreError, match="not a PlanStore"):
+            build_tiers(f"store:{tmp_path}/nope", cfg, params, 8.0)
+        empty = sweep.PlanStore(str(tmp_path / "empty"))
+        os.makedirs(empty.entries_dir)
+        with pytest.raises(sweep.StoreError, match="no entries"):
+            build_tiers(f"store:{empty.root}", cfg, params, 8.0)
+
+    def test_provenance_round_trip(self, lm_ref):
+        """save -> store -> load -> tier_from_plan keeps the quality
+        signal consistent with the stored plan's mean bits."""
+        _, store, _, _ = lm_ref
+        for e in store.query(kind="point"):
+            plan = store.get(e["plan"])
+            tier = fleet_mod.tier_from_plan(e["name"], plan,
+                                            base_step_ms=8.0)
+            assert tier.quality == pytest.approx(
+                fleet_mod.plan_mean_bits(plan))
+            assert tier.plan.equals(plan)
+            # lineage survives: the entry still knows its lambda and
+            # parent after the full round trip
+            assert "lam" in e["lineage"] and "parent" in e["lineage"]
+
+
+# ---------------------------------------------------------------------------
+# sweep trace grammar
+# ---------------------------------------------------------------------------
+
+class TestSweepTraceGrammar:
+    @pytest.mark.parametrize("kinds", [
+        ["point_enqueued"],
+        ["point_enqueued", "point_loaded"],
+        ["point_enqueued", "point_started"],
+        ["point_enqueued", "point_started", "point_finished"],
+    ])
+    def test_valid(self, kinds):
+        assert RequestTracer.check_lifecycle(kinds) is None
+
+    @pytest.mark.parametrize("kinds", [
+        ["point_started"],
+        ["point_enqueued", "point_finished"],
+        ["point_enqueued", "point_loaded", "point_started"],
+        ["point_enqueued", "point_started", "point_finished",
+         "point_started"],
+        ["point_enqueued", "admitted"],
+        ["enqueued", "point_started"],
+    ])
+    def test_invalid(self, kinds):
+        assert RequestTracer.check_lifecycle(kinds) is not None
