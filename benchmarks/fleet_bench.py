@@ -9,10 +9,17 @@ worst case.  Latency is the fleet's deterministic virtual clock, so
 rows are machine-independent; token content is real (each replica runs
 its actual quantized decode).
 
-Emits ``BENCH_fleet.json``; the headline acceptance number is
+A crash-and-recover scenario (``repro.chaos``: one replica's session
+killed mid-run at a pinned virtual time) compares failover on vs off on
+the same trace: with failover the struck replica's in-flight requests
+are recovered recompute-style onto survivors, without it they die with
+the ``crashed`` terminal.
+
+Emits ``BENCH_fleet.json``; the headline acceptance numbers are
 ``pareto_degrade`` beating ``static:float`` on deadline attainment
-under overload, which is the paper's Pareto front doing work at serving
-time.  The script asserts it.
+under overload (the paper's Pareto front doing work at serving time),
+and failover strictly beating no-failover under the crash.  The script
+asserts both.
 
     PYTHONPATH=src python -m benchmarks.fleet_bench [--arch ...] \
         [--out BENCH_fleet.json]
@@ -27,10 +34,11 @@ import jax
 from repro.configs import registry
 from repro.models import lm
 from repro import fleet as fleet_mod
+from repro.chaos import ChaosInjector, FaultSpec
 from repro.launch.fleet import build_fleet
 from benchmarks.serve_bench import machine_baseline
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 POLICIES = ("static:float", "round_robin", "least_loaded",
             "pareto_degrade")
@@ -130,6 +138,29 @@ def main(argv=None):
               f"timeouts={row['status']['timeout']},"
               f"degraded={row['degraded']}")
 
+    # crash-and-recover: kill the float replica's session mid-run on
+    # the virtual clock; same trace with failover on vs off.  Recovered
+    # requests replay their sampling streams byte-identically on
+    # survivors; without failover they die with the crashed terminal.
+    crash = lambda: ChaosInjector([FaultSpec(      # noqa: E731
+        kind="crash", target="float", t_ms=60.0, until_ms=600.0)])
+    for failover in (True, False):
+        flt.failover = failover
+        flt.chaos = crash()
+        row = run_policy(flt, "round_robin", poisson)
+        flt.chaos = None
+        flt.failover = True
+        row["trace"] = "crash"
+        row["policy"] = ("crash_failover" if failover
+                         else "crash_no_failover")
+        row["crashed"] = row["status"].get("crashed", 0)
+        results.append(row)
+        att = row["deadline_attainment"]
+        print(f"fleet/{row['policy']},crash,"
+              f"attainment={att if att is None else round(att, 4)},"
+              f"crashed={row['crashed']},"
+              f"timeouts={row['status']['timeout']}")
+
     by = {(r["policy"], r["trace"]): r for r in results
           if "policy" in r}
     static_att = by[("static:float", "poisson")]["deadline_attainment"]
@@ -139,6 +170,13 @@ def main(argv=None):
     assert pareto_att > static_att, (
         f"pareto_degrade attainment {pareto_att} must beat "
         f"static:float {static_att} under overload")
+    fo_att = by[("crash_failover", "crash")]["deadline_attainment"]
+    nofo_att = by[("crash_no_failover", "crash")]["deadline_attainment"]
+    # robustness acceptance: recovering a crashed replica's requests
+    # must strictly beat letting them die
+    assert fo_att > nofo_att, (
+        f"crash failover attainment {fo_att} must beat no-failover "
+        f"{nofo_att}")
 
     report = {
         "benchmark": "fleet",
@@ -157,7 +195,9 @@ def main(argv=None):
         "tiers": tiers,
         "results": results,
         "headline": {"static_float_attainment": static_att,
-                     "pareto_degrade_attainment": pareto_att},
+                     "pareto_degrade_attainment": pareto_att,
+                     "crash_failover_attainment": fo_att,
+                     "crash_no_failover_attainment": nofo_att},
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

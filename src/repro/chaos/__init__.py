@@ -1,0 +1,17 @@
+"""repro.chaos: deterministic fault injection for the serving fleet.
+
+Faults are declared as a seeded schedule of :class:`FaultSpec` records
+pinned to the fleet's virtual clock and applied at host boundaries only
+(engine session API, cache backend, router, plan store) -- never inside
+jitted code.  See ``src/repro/chaos/README.md`` for the taxonomy, the
+injection-point contract and the determinism rules, and
+``repro.fleet.health`` for the failure-detection side.
+"""
+from repro.chaos.faults import FAULT_KINDS, FaultSpec, parse_chaos
+from repro.chaos.inject import (ChaosInjector, corrupt_store_entry,
+                                poison_params)
+
+__all__ = [
+    "FAULT_KINDS", "FaultSpec", "parse_chaos",
+    "ChaosInjector", "corrupt_store_entry", "poison_params",
+]

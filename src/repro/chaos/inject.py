@@ -1,0 +1,146 @@
+"""Fault injection driven by the fleet's virtual clock.
+
+:class:`ChaosInjector` turns a fault schedule into a stream of
+``(phase, FaultSpec)`` events the fleet consumes inside its event loop:
+``inject`` at ``t_ms`` and ``restore`` at ``until_ms``.  The injector
+never touches a replica itself -- the fleet applies each event at the
+matching host boundary (engine session API, cache backend, router
+candidate set), so no fault can reach inside jitted code.
+
+The two injection helpers that ARE host-boundary mutations live here:
+:func:`poison_params` (the ``nan_plan`` fault -- swaps NaN-filled
+parameter leaves into a server's bound tree, returning an undo closure)
+and :func:`corrupt_store_entry` (the ``store_corrupt`` fault -- writes
+garbage over a PlanStore entry file).  Neither imports jax: poisoned
+leaves are plain numpy arrays, which jit consumes like any other leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.chaos.faults import FaultSpec
+
+
+class ChaosInjector:
+    """Replays a fault schedule against a virtual clock.
+
+    ``due(now)`` returns every not-yet-delivered ``(phase, spec)``
+    event with ``t <= now`` (each exactly once, in schedule order);
+    ``next_time()`` is the earliest undelivered event time, which the
+    fleet folds into its next-event computation so the clock jumps TO
+    fault times instead of over them.
+    """
+
+    def __init__(self, schedule):
+        self.schedule = list(schedule)
+        events = []
+        for i, f in enumerate(self.schedule):
+            events.append((float(f.t_ms), i, "inject", f))
+            if f.until_ms is not None:
+                events.append((float(f.until_ms), i, "restore", f))
+        self._events = sorted(events, key=lambda e: (e[0], e[1],
+                                                     e[2] != "inject"))
+        self.delivered: list = []     # (t, phase, spec) in delivery order
+
+    def due(self, now: float, eps: float = 1e-9) -> list:
+        out = []
+        while self._events and self._events[0][0] <= now + eps:
+            t, _, phase, spec = self._events.pop(0)
+            self.delivered.append((t, phase, spec))
+            out.append((phase, spec))
+        return out
+
+    def next_time(self):
+        return self._events[0][0] if self._events else None
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._events
+
+
+# ---------------------------------------------------------------------------
+# host-boundary mutations
+# ---------------------------------------------------------------------------
+
+def _nan_like(leaf):
+    return np.full(np.shape(leaf), np.nan, dtype=leaf.dtype)
+
+
+def _is_float_leaf(leaf) -> bool:
+    dt = str(getattr(leaf, "dtype", ""))
+    return dt.startswith("float") or dt == "bfloat16"
+
+
+def _poison_node(node):
+    """Depth-first: NaN the first packed-linear scale set (quantized
+    tier) or the first float matrix leaf (float tier).  Returns
+    ``(new_node, hit)``."""
+    # a PackedLinear (duck-typed so this module stays jax-free): NaN
+    # every precision group's dequant scales
+    if hasattr(node, "groups") and hasattr(node, "out_index"):
+        if not node.groups:
+            return node, False            # fully pruned: keep looking
+        groups = tuple((b, wq, _nan_like(sw))
+                       for b, wq, sw in node.groups)
+        return dataclasses.replace(node, groups=groups), True
+    if isinstance(node, dict):
+        out = {}
+        hit = False
+        for k in node:
+            if hit:
+                out[k] = node[k]
+            else:
+                out[k], hit = _poison_node(node[k])
+        return out, hit
+    if isinstance(node, (tuple, list)):
+        out = []
+        hit = False
+        for v in node:
+            if hit:
+                out.append(v)
+            else:
+                nv, hit = _poison_node(v)
+                out.append(nv)
+        return type(node)(out) if isinstance(node, tuple) else out, hit
+    if _is_float_leaf(node) and getattr(node, "ndim", 0) >= 2:
+        return _nan_like(node), True
+    return node, False
+
+
+def poison_params(server):
+    """NaN-poison one projection of a server's bound parameter tree --
+    the ``nan_plan`` fault.  Purely host-side: the poisoned tree is
+    swapped in between steps (same shapes/dtypes, so no recompilation)
+    and the engine's sampling-boundary NaN guard trips on the next
+    decode.  Returns an ``undo()`` closure restoring the original
+    tree."""
+    old = server.params
+    blocks, hit = _poison_node(old["blocks"])
+    if not hit:
+        raise RuntimeError("poison_params found no poisonable leaf in "
+                           "params['blocks']")
+    new = dict(old)
+    new["blocks"] = blocks
+    server.params = new
+
+    def undo():
+        server.params = old
+    return undo
+
+
+def corrupt_store_entry(store, name: str) -> str:
+    """Overwrite a PlanStore entry file with garbage bytes -- the
+    ``store_corrupt`` fault.  Returns the path written.  The store's
+    read path surfaces it as
+    :class:`~repro.sweep.store.StoreCorruptError`, which the sweep's
+    resume path quarantines and recomputes."""
+    path = store._entry_path(name)
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no entry {name!r} to corrupt "
+                                f"({path})")
+    with open(path, "w") as f:
+        f.write("{\"entry_version\": 1, \"name\": \"")   # truncated JSON
+    return path

@@ -8,10 +8,20 @@ policies (``round_robin`` / ``least_loaded`` / ``pareto_degrade`` /
 overdue work (pages freed, ``timeout`` lifecycle event, bounded
 retries), and reports SLO attainment through the ``repro.obs``
 exporters.  See ``fleet.py`` for the virtual-time model.
+
+Robustness: a :class:`~repro.fleet.health.HealthMonitor` infers each
+replica's state (healthy/degraded/down/draining/warming) from
+heartbeats, a decode-progress watchdog and warm-up probes; routers
+filter on it, and crashed/quarantined replicas' in-flight requests are
+recovered recompute-style onto survivors with their token streams
+byte-identical to the fault-free run (see ``repro.chaos`` for the
+deterministic fault injection that exercises all of this).
 """
 from repro.fleet.fleet import (Attempt, Fleet, FleetRequest, Replica,
                                RequestRecord, TierSpec, plan_mean_bits,
                                tier_from_plan)
+from repro.fleet.health import (HEALTH_STATES, ROUTABLE_STATES,
+                                HealthMonitor, ReplicaHealth)
 from repro.fleet.loadgen import burst_trace, poisson_trace, slo_report
 from repro.fleet.router import (ROUTERS, LeastLoaded, ParetoDegrade,
                                 RoundRobin, Router, StaticTier,
@@ -20,6 +30,8 @@ from repro.fleet.router import (ROUTERS, LeastLoaded, ParetoDegrade,
 __all__ = [
     "Fleet", "FleetRequest", "Replica", "RequestRecord", "Attempt",
     "TierSpec", "plan_mean_bits", "tier_from_plan",
+    "HealthMonitor", "ReplicaHealth", "HEALTH_STATES",
+    "ROUTABLE_STATES",
     "poisson_trace", "burst_trace", "slo_report",
     "Router", "RoundRobin", "LeastLoaded", "ParetoDegrade",
     "StaticTier", "ROUTERS", "make_router",

@@ -17,6 +17,13 @@ give-ups are visible, not silent.
   front, and it recovers as predicted waits shrink.
 - ``static:<tier>`` -- pin one tier; the single-tier baseline the bench
   compares ``pareto_degrade`` against.
+
+Every policy routes over the fleet's health-filtered candidate set
+(:meth:`Router.candidates`): ``down``/``warming`` replicas are never
+eligible, ``draining`` ones only when nothing healthier exists (a
+saturated pool is survivable, a dead session is not).  With every
+replica healthy the candidate set is the whole fleet and routing is
+exactly the pre-failover behavior.
 """
 from __future__ import annotations
 
@@ -28,6 +35,19 @@ class Router:
 
     def __init__(self, fleet):
         self.fleet = fleet
+
+    def candidates(self):
+        """Replicas ordinary traffic may target: the health monitor's
+        routable set (healthy/degraded), falling back to draining
+        replicas when no routable one exists.  Empty means every
+        dispatch sheds until something recovers."""
+        health = self.fleet.health
+        out = [r for r in self.fleet.replicas
+               if health.routable(r.tier.name)]
+        if not out:
+            out = [r for r in self.fleet.replicas
+                   if health.state(r.tier.name) == "draining"]
+        return out
 
     def route(self, fr, now):
         """-> (Replica | None, degraded: bool); None sheds."""
@@ -42,7 +62,10 @@ class RoundRobin(Router):
         self._i = 0
 
     def route(self, fr, now):
-        rep = self.fleet.replicas[self._i % len(self.fleet.replicas)]
+        reps = self.candidates()
+        if not reps:
+            return None, False
+        rep = reps[self._i % len(reps)]
         self._i += 1
         return rep, False
 
@@ -51,12 +74,16 @@ class LeastLoaded(Router):
     name = "least_loaded"
 
     def route(self, fr, now):
+        reps = self.candidates()
+        if not reps:
+            return None, False
+
         def key(pair):
             idx, rep = pair
             load = rep.server.load_report()
             return (load["queued"] + load["active"],
                     load["pages_in_use"], idx)
-        _, rep = min(enumerate(self.fleet.replicas), key=key)
+        _, rep = min(enumerate(reps), key=key)
         return rep, False
 
 
@@ -64,15 +91,20 @@ class ParetoDegrade(Router):
     name = "pareto_degrade"
 
     def route(self, fr, now):
-        reps = sorted(self.fleet.replicas,
-                      key=lambda r: (-r.tier.quality, r.tier.name))
+        by_quality = lambda r: (-r.tier.quality, r.tier.name)  # noqa: E731
+        reps = sorted(self.candidates(), key=by_quality)
+        if not reps:
+            return None, True
+        # "degraded" is judged against the fleet's overall top tier:
+        # routing around a down top replica is a quality give-up too
+        top = min(self.fleet.replicas, key=by_quality)
         if fr.deadline_ms is None:
-            return reps[0], False
+            return reps[0], reps[0] is not top
         deadline_abs = now + fr.deadline_ms
         for rep in reps:
             eta = self.fleet.predicted_completion_ms(rep, fr, now)
             if eta <= deadline_abs + 1e-9:
-                return rep, rep is not reps[0]
+                return rep, rep is not top
         return None, True          # hopeless everywhere: shed
 
     # the recovery property is free: predicted waits are a pure
@@ -81,7 +113,9 @@ class ParetoDegrade(Router):
 
 
 class StaticTier(Router):
-    """Pin every request to one named tier (``static:<name>``)."""
+    """Pin every request to one named tier (``static:<name>``).
+    Requests still queue on a draining pinned tier (old single-replica
+    behavior), but shed while it is down or warming."""
 
     name = "static"
 
@@ -90,6 +124,9 @@ class StaticTier(Router):
         self.rep = fleet.replica_by_name(tier)
 
     def route(self, fr, now):
+        state = self.fleet.health.state(self.rep.tier.name)
+        if state in ("down", "warming"):
+            return None, False
         return self.rep, False
 
 

@@ -11,6 +11,12 @@ Pareto-aware router, deadline admission and an open-loop load trace.
         --tiers float,w8,mixed,w2 --policy pareto_degrade \
         --trace-kind burst --metrics fleet.prom --trace fleet.jsonl
 
+    # chaos: deterministic crash + slow faults with failover and
+    # health-gated recovery (CI's chaos smoke stage):
+    PYTHONPATH=src python -m repro.launch.fleet \
+        --tiers float,w8 --chaos crash+slow --chaos-seed 7 \
+        --metrics fleet.prom --trace fleet.jsonl --report fleet.json
+
 Tier specs (comma-separated), in plan-source order:
 
 * ``store:<dir>`` -- every Pareto-front entry of a ``repro.sweep``
@@ -96,7 +102,8 @@ def build_tier(spec: str, cfg, params, base_step_ms: float):
 def build_fleet(cfg, params, tier_specs, *, policy: str,
                 max_len: int, max_batch: int, cache: str,
                 page_size: int, pages, base_step_ms: float,
-                metrics: bool = True) -> fleet_mod.Fleet:
+                metrics: bool = True, chaos=None,
+                failover: bool = True) -> fleet_mod.Fleet:
     pairs = []
     for spec in tier_specs:
         for tier in build_tiers(spec, cfg, params, base_step_ms):
@@ -105,7 +112,8 @@ def build_fleet(cfg, params, tier_specs, *, policy: str,
                 max_batch=max_batch, cache=cache, page_size=page_size,
                 pages=pages)
             pairs.append((tier, server))
-    return fleet_mod.Fleet(pairs, policy=policy, metrics=metrics)
+    return fleet_mod.Fleet(pairs, policy=policy, metrics=metrics,
+                           chaos=chaos, failover=failover)
 
 
 def main():
@@ -143,6 +151,18 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault schedule, e.g. "
+                         "'crash+slow' or 'crash@40:w8+slow@30-200:x6' "
+                         "(see repro.chaos.parse_chaos); targets "
+                         "default to seeded draws over the fleet's "
+                         "tiers")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the unpinned fields of --chaos")
+    ap.add_argument("--no-failover", action="store_true",
+                    help="disable crash recovery (struck replicas' "
+                         "requests die with the fault terminal) -- the "
+                         "ablation arm")
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="write the shared registry in Prometheus text "
                          "format to PATH")
@@ -159,7 +179,8 @@ def main():
     flt = build_fleet(cfg, params, tier_specs, policy=args.policy,
                       max_len=args.max_len, max_batch=args.max_batch,
                       cache=args.cache, page_size=args.page_size,
-                      pages=args.pages, base_step_ms=args.base_step_ms)
+                      pages=args.pages, base_step_ms=args.base_step_ms,
+                      failover=not args.no_failover)
     for rep in flt.replicas:
         print(f"[fleet] replica {rep.tier.name}: "
               f"quality={rep.tier.quality:.2f} bits, "
@@ -180,6 +201,16 @@ def main():
             n_bursts, args.burst_size,
             burst_every_ms=args.burst_every_ms, **common)[:args.requests]
 
+    if args.chaos:
+        from repro.chaos import ChaosInjector, parse_chaos
+        horizon = (trace[-1].arrival_ms if trace else 0.0) + 1000.0
+        sched = parse_chaos(args.chaos,
+                            targets=[r.tier.name for r in flt.replicas],
+                            seed=args.chaos_seed, horizon_ms=horizon)
+        for spec in sched:
+            print(f"[chaos] {spec.describe()}")
+        flt.chaos = ChaosInjector(sched)
+
     records = flt.run(trace)
     report = fleet_mod.slo_report(flt, records)
     st = report["status"]
@@ -195,6 +226,13 @@ def main():
               f"p50={fmt(t['ttft_ms']['p50'])} "
               f"p99={fmt(t['ttft_ms']['p99'])}, token "
               f"p50={fmt(t['token_latency_ms']['p50'])}")
+    if args.chaos:
+        n_rec = sum(1 for r in records.values()
+                    for a in r.attempts
+                    if a.cause.startswith("recovered:"))
+        print(f"[chaos] {len(flt.chaos.delivered)} fault events "
+              f"delivered, {n_rec} requests recovered; "
+              f"health: {flt.health.states()}")
 
     if args.metrics:
         from repro.obs import write_prometheus

@@ -13,8 +13,8 @@ the metric catalog and exporter formats.
 """
 from .registry import (LATENCY_BUCKETS_S, Counter, Gauge, Histogram,
                        MetricsRegistry)
-from .tracing import (EVENT_KINDS, SWEEP_KINDS, RequestTracer,
-                      TraceEvent)
+from .tracing import (EVENT_KINDS, FAULT_TERMINAL_KINDS, SWEEP_KINDS,
+                      TERMINAL_KINDS, RequestTracer, TraceEvent)
 from .exporters import (percentiles, run_summary, to_prometheus,
                         trace_to_jsonl, write_prometheus, write_trace)
 
@@ -47,8 +47,8 @@ class Observability:
 
 __all__ = [
     "LATENCY_BUCKETS_S", "Counter", "Gauge", "Histogram",
-    "MetricsRegistry", "EVENT_KINDS", "SWEEP_KINDS", "RequestTracer",
-    "TraceEvent",
+    "MetricsRegistry", "EVENT_KINDS", "FAULT_TERMINAL_KINDS",
+    "SWEEP_KINDS", "TERMINAL_KINDS", "RequestTracer", "TraceEvent",
     "Observability", "percentiles", "run_summary", "to_prometheus",
     "trace_to_jsonl", "write_prometheus", "write_trace",
 ]

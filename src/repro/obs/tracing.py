@@ -33,14 +33,24 @@ from dataclasses import dataclass, field
 
 EVENT_KINDS = ("enqueued", "admitted", "prefilled", "first_token",
                "decode", "preempted", "finished", "timeout", "cancelled",
+               # fault-path lifecycle (repro.chaos / fleet failover):
+               # crashed/quarantined strike every request in flight on a
+               # replica that died or started emitting NaN logits;
+               # recovered marks the failover re-enqueue onto a survivor
+               "crashed", "quarantined", "recovered",
                # sweep-point lifecycle (repro.sweep): a search point is
                # enqueued, then either loaded from the plan store or
                # started (warm or cold) and finished into the store
                "point_enqueued", "point_started", "point_loaded",
                "point_finished")
-# events that end a residency episode for a uid (a timeout/cancelled uid
-# may be re-enqueued by the fleet's retry path; finished is final)
-TERMINAL_KINDS = ("finished", "timeout", "cancelled")
+# events that end a residency episode for a uid (a timeout/cancelled/
+# crashed/quarantined uid may be re-enqueued by the fleet's retry or
+# failover path; finished is final)
+TERMINAL_KINDS = ("finished", "timeout", "cancelled", "crashed",
+                  "quarantined")
+# the fault-struck subset of TERMINAL_KINDS: episodes ended by one of
+# these may be followed by a `recovered` marker before the re-enqueue
+FAULT_TERMINAL_KINDS = ("crashed", "quarantined")
 # the sweep-point subset: a uid uses either the serve grammar or the
 # sweep grammar, never a mix
 SWEEP_KINDS = ("point_enqueued", "point_started", "point_loaded",
@@ -152,11 +162,12 @@ class RequestTracer:
                     labels=("replica",)).observe(
                     t - (t if entered is None else entered),
                     replica=self.replica)
-        elif kind in ("timeout", "cancelled"):
+        elif kind in ("timeout", "cancelled", "crashed", "quarantined"):
             self._queued.pop(ev.uid, None)
         if reg is not None and kind in ("enqueued", "admitted",
                                         "preempted", "timeout",
-                                        "cancelled"):
+                                        "cancelled", "crashed",
+                                        "quarantined"):
             reg.gauge("serve_queue_depth",
                       "Requests waiting for a decode slot",
                       labels=("replica",)).set(len(self._queued),
@@ -254,20 +265,29 @@ class RequestTracer:
         lifecycle grammar; returns None if valid, else an error string.
 
         Grammar (one or more *episodes*; every episode but the last
-        ends in ``cancelled`` or ``timeout`` -- the fleet's retry path
-        re-enqueues the uid -- and the final one ends in any terminal)::
+        ends in ``cancelled``/``timeout`` -- the fleet's retry path
+        re-enqueues the uid -- or in ``crashed``/``quarantined`` -- the
+        failover path, optionally marked by ``recovered`` before the
+        re-enqueue -- and the final one ends in any terminal)::
 
+            TRACE    := EPISODE (recovered? EPISODE)*
             EPISODE  := enqueued RESIDENCY* TERMINAL
             RESIDENCY:= admitted prefilled TOKEN decode* [preempted]
             TERMINAL := finished | cancelled | timeout
+                      | crashed | quarantined
 
         where TOKEN is ``first_token`` on an episode's first residency
         and ``decode`` on re-admissions (the resume token is sampled
         from the re-prefill logits, which is a decode step for the
         request); ``finished`` must follow a residency (a request can
-        only complete while resident), while ``cancelled``/``timeout``
-        may also strike a queued or preempted request directly, and
-        ``finished`` must be the uid's last event overall.
+        only complete while resident), while the other terminals may
+        also strike a queued or preempted request directly;
+        ``finished`` must be the uid's last event overall, and
+        ``recovered`` is only legal right after a ``crashed``/
+        ``quarantined`` terminal -- followed by a fresh episode in a
+        merged fleet trace, or ending the stream (the marker is stamped
+        on the struck replica's tracer; the re-enqueue lands on the
+        survivor's).
         """
         kinds = list(kinds)
         if not kinds:
@@ -275,7 +295,19 @@ class RequestTracer:
         if any(k in SWEEP_KINDS for k in kinds):
             return RequestTracer._check_sweep_lifecycle(kinds)
         i, n = 0, len(kinds)
+        prev_terminal = None
         while i < n:
+            if kinds[i] == "recovered":
+                if prev_terminal not in FAULT_TERMINAL_KINDS:
+                    return f"event {i}: 'recovered' without a " \
+                           f"preceding crashed/quarantined terminal"
+                i += 1
+                if i >= n:
+                    # valid end: the marker lives on the struck
+                    # replica's tracer, the re-enqueue on the
+                    # survivor's -- a single replica's stream may
+                    # legally end here
+                    return None
             if kinds[i] != "enqueued":
                 return f"event {i}: expected 'enqueued', got {kinds[i]!r}"
             i += 1
@@ -285,9 +317,11 @@ class RequestTracer:
             while terminal is None:
                 if i >= n:
                     return "trace ends without a terminal event " \
-                           "(finished/cancelled/timeout)"
+                           "(finished/cancelled/timeout/crashed/" \
+                           "quarantined)"
                 k = kinds[i]
-                if k in ("cancelled", "timeout"):
+                if k in ("cancelled", "timeout", "crashed",
+                         "quarantined"):
                     terminal = k
                     i += 1
                 elif k == "finished":
@@ -325,8 +359,11 @@ class RequestTracer:
                     return f"event {i}: unexpected {k!r}"
             if terminal == "finished" and i != n:
                 return f"events after 'finished' at {i - 1}"
-            # cancelled/timeout: any further events must be a fresh
-            # episode (the outer loop re-expects 'enqueued')
+            # cancelled/timeout/crashed/quarantined: any further events
+            # must be a fresh episode (the outer loop re-expects
+            # 'enqueued', optionally preceded by 'recovered' after a
+            # fault terminal)
+            prev_terminal = terminal
         return None
 
     @staticmethod

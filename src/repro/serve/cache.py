@@ -173,6 +173,18 @@ class CacheBackend:
         self._metrics = registry if (registry is not None
                                      and registry.enabled) else None
 
+    def shrink_pool(self, n_pages: int) -> int:
+        """Withhold up to ``n_pages`` free pages from the pool (the
+        chaos layer's page-pool-pressure fault; a pure host-side
+        bookkeeping change).  Returns how many were actually withheld
+        (0 for backends without a pool)."""
+        return 0
+
+    def restore_pool(self) -> int:
+        """Return every withheld page to the free pool; returns how
+        many came back."""
+        return 0
+
     def publish_metrics(self):
         """Mirror the numeric fields of :meth:`memory_report` into
         ``serve_cache_<key>{backend=...}`` gauges."""
@@ -299,6 +311,7 @@ class PagedCache(CacheBackend):
         self._table_dev = jnp.asarray(self._table)
         self.table_host_uploads = 0
         self._free = collections.deque(range(1, self.n_pages + 1))
+        self._withheld: list = []     # pages removed by shrink_pool()
         self._handles: dict[int, CacheHandle] = {}
         self._peak_pages = 0
 
@@ -441,7 +454,27 @@ class PagedCache(CacheBackend):
 
     @property
     def pages_in_use(self) -> int:
-        return self.n_pages - len(self._free)
+        return self.n_pages - len(self._free) - len(self._withheld)
+
+    def shrink_pool(self, n_pages: int) -> int:
+        # withhold from the BACK of the free deque so page-id reuse
+        # order for live traffic is unchanged until pressure actually
+        # bites (determinism: same fault -> same allocation sequence)
+        taken = 0
+        while taken < int(n_pages) and self._free:
+            self._withheld.append(self._free.pop())
+            taken += 1
+        self._gauge_pages()
+        return taken
+
+    def restore_pool(self) -> int:
+        n = len(self._withheld)
+        # restore in reverse so the free deque returns to its
+        # pre-pressure ordering
+        while self._withheld:
+            self._free.append(self._withheld.pop())
+        self._gauge_pages()
+        return n
 
     # -- data movement ------------------------------------------------------
     def insert(self, handle, prefill_caches):
@@ -467,6 +500,7 @@ class PagedCache(CacheBackend):
             "n_pages": self.n_pages,
             "pages_in_use": in_use,
             "pages_free": len(self._free),
+            "pages_withheld": len(self._withheld),
             "peak_pages_in_use": self._peak_pages,
             "bytes_per_page": self.bytes_per_page,
             "ssm_slot_bytes": self.ssm_slot_bytes,
@@ -493,6 +527,7 @@ class PagedCache(CacheBackend):
         self._table_dev = jnp.asarray(self._table)
         self.table_host_uploads = 0
         self._free = collections.deque(range(1, self.n_pages + 1))
+        self._withheld = []
         self._peak_pages = 0
 
 

@@ -138,12 +138,17 @@ class StepResult:
     ``produced`` maps uid -> tokens generated so far, for every request
     that gained a token this step (admission token or decode token);
     ``idle`` means no decode ran (the engine jumped the clock to the
-    next arrival, or had nothing at all to do)."""
+    next arrival, or had nothing at all to do).  ``nan`` means NaN
+    logits were detected at the sampling host boundary: the step's
+    tokens were DISCARDED (no stream advanced, nothing finished) and
+    the caller should quarantine the server -- the fleet's failover
+    path recovers the in-flight requests onto healthy replicas."""
 
     admitted: list
     produced: dict
     finished: list
     idle: bool = False
+    nan: bool = False
 
 
 class InferenceServer:
@@ -220,14 +225,16 @@ class InferenceServer:
         def decode_sample(params, tokens, caches, tables, pos, temps,
                           topks, seeds, uids, tidx, need_top_k, width):
             """One decode step + on-device batched sampling: only the
-            (B,) sampled ids cross back to the host."""
+            (B,) sampled ids (plus the scalar NaN-guard flag) cross back
+            to the host."""
             logits, caches = lm.decode_step(
                 cfg, params, tokens, caches, pos,
                 tables=_live_tables(tables, width))
+            row = logits[:, -1, :vocab]
             next_tok = sample_tokens_device(
-                logits[:, -1, :vocab], temps, topks, seeds, uids, tidx,
+                row, temps, topks, seeds, uids, tidx,
                 need_top_k=need_top_k)
-            return next_tok, caches
+            return next_tok, caches, jnp.isnan(row).any()
 
         self._decode_sample = jax.jit(decode_sample, donate_argnums=(2,),
                                       static_argnums=(10, 11))
@@ -237,16 +244,21 @@ class InferenceServer:
             logits, caches = lm.decode_step(
                 cfg, params, tokens, caches, pos,
                 tables=_live_tables(tables, width))
-            next_tok = jnp.argmax(
-                logits[:, -1, :vocab].astype(jnp.float32), axis=-1)
-            return next_tok.astype(jnp.int32), caches
+            row = logits[:, -1, :vocab].astype(jnp.float32)
+            next_tok = jnp.argmax(row, axis=-1)
+            return next_tok.astype(jnp.int32), caches, jnp.isnan(row).any()
 
         self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(2,),
                                       static_argnums=(5,))
+        # the NaN-guard flag rides back with the sampled id: a scalar
+        # crossing an already-paid host boundary, so corrupted (e.g.
+        # NaN-poisoned-plan) logits are caught before a garbage token
+        # can enter a client stream
         self._sample = jax.jit(
             lambda lg, temps, topks, seeds, uids, tidx, need_top_k:
-            sample_tokens_device(lg[:, :vocab], temps, topks, seeds,
-                                 uids, tidx, need_top_k=need_top_k),
+            (sample_tokens_device(lg[:, :vocab], temps, topks, seeds,
+                                  uids, tidx, need_top_k=need_top_k),
+             jnp.isnan(lg[:, :vocab]).any()),
             static_argnums=(6,))
         # per-step decode latency split: [gather_s, step_s, n_steps]
         self._step_timing = [0.0, 0.0, 0]
@@ -256,6 +268,7 @@ class InferenceServer:
         self._n_steps = 0
         self._n_admitted = 0
         self._cancelled: dict = {}
+        self._nan_detected = False
         self.obs = None
         self._reg = None
         self.attach_obs(obs)
@@ -295,7 +308,7 @@ class InferenceServer:
         request's stream): device path or host fallback."""
         if self.sample_on_device:
             sp = st_req.sampling
-            tok = self._sample(
+            tok, bad = self._sample(
                 logits_last.astype(jnp.float32),
                 jnp.asarray([sp.temperature], jnp.float32),
                 jnp.asarray([sp.top_k], jnp.int32),
@@ -303,9 +316,27 @@ class InferenceServer:
                 jnp.asarray([uid], jnp.int32),
                 jnp.asarray([tidx], jnp.int32),
                 0 < sp.top_k < self.cfg.vocab)
+            if bool(np.asarray(bad)):
+                self._flag_nan()
             return int(np.asarray(tok)[0])
         row = np.asarray(logits_last.astype(jnp.float32))[0]
-        return sample_token(row[: self.cfg.vocab], st_req.sampling, rng)
+        vrow = row[: self.cfg.vocab]
+        if np.isnan(vrow).any():
+            self._flag_nan()
+            return 0        # untrusted step; never reaches `finished`
+        return sample_token(vrow, st_req.sampling, rng)
+
+    def _flag_nan(self):
+        """Record a NaN detection at the sampling host boundary.  The
+        flag makes the current step's tokens untrusted: ``step()``
+        discards them and reports ``StepResult.nan``, and ``serve()``
+        raises (a solo server has no failover path)."""
+        self._nan_detected = True
+        if self._reg is not None:
+            self._reg.counter(
+                "fault_nan_detected_total",
+                "NaN logits detected at the sampling host boundary"
+            ).inc()
 
     # ------------------------------------------------------------ serving
     #
@@ -318,11 +349,14 @@ class InferenceServer:
     # so it can interleave arrivals, deadline scans and cancellations
     # with decode steps.
 
-    def begin(self, requests=()):
+    def begin(self, requests=(), *, fresh_trace: bool = True):
         """Open a serving session (per-run trace reset, fresh scheduler,
-        cache backend reset) and submit ``requests``."""
+        cache backend reset) and submit ``requests``.
+        ``fresh_trace=False`` keeps the tracer's events and time origin
+        -- the fleet's crash-restore path reopens a struck replica's
+        session without erasing its crashed/recovered history."""
         tracer = self.obs.tracer if self.obs is not None else None
-        if tracer is not None:
+        if tracer is not None and fresh_trace:
             tracer.start()          # per-run trace; metrics cumulative
         self._sched = Scheduler(self.max_batch, self.max_len,
                                 tracer=tracer)
@@ -332,18 +366,22 @@ class InferenceServer:
         self._n_steps = 0
         self._n_admitted = 0
         self._cancelled: dict = {}   # uid -> (reason, tokens np.ndarray)
+        self._nan_detected = False
         for r in requests:
             self.submit(r)
         return self
 
-    def submit(self, request):
+    def submit(self, request, *, front: bool = False, trace_extra=None):
         """Enqueue a request into the open session (feasibility-checked
-        against the cache backend's admission contract)."""
+        against the cache backend's admission contract).  ``front=True``
+        enqueues at the front of the queue -- the fleet's failover path
+        preserves FCFS seniority of recovered requests this way --
+        and ``trace_extra`` keys ride on the ``enqueued`` trace event."""
         if self._sched is None:
             raise RuntimeError("no open session; call begin() first")
         self.backend.check_feasible(np.asarray(request.prompt).size,
                                     request.sampling.max_tokens)
-        self._sched.submit(request)
+        self._sched.submit(request, front=front, trace_extra=trace_extra)
         if self._reg is not None:
             self._reg.counter("serve_requests_total",
                               "Requests submitted to serve()").inc()
@@ -419,7 +457,11 @@ class InferenceServer:
                              pages_held=len(handle.pages), slot=slot)
             sched.activate(slot, st)
             admitted.append(req.uid)
-            if st.remaining <= 0 or st.pos >= self.max_len:
+            # a NaN-flagged admission token is untrusted: leave the
+            # request resident so the quarantine/recovery path can
+            # strike it instead of letting garbage into `finished`
+            if (st.remaining <= 0 or st.pos >= self.max_len) \
+                    and not self._nan_detected:
                 st.truncated = st.remaining > 0
                 backend.free(handle)
                 sched.complete(slot)
@@ -441,6 +483,12 @@ class InferenceServer:
                 (s for s in sched.active if s.request.uid == uid), None)
             if st is not None:
                 produced[uid] = len(st.out)
+        if self._nan_detected:
+            # admission sampling tripped the NaN guard: nothing
+            # completed (see _admit); surface and skip the decode
+            return StepResult(admitted=admitted, produced=produced,
+                              finished=list(sched.finished)[fin0:],
+                              nan=True)
 
         active = sched.active
         idle = False
@@ -453,6 +501,12 @@ class InferenceServer:
             # one batched decode step over the active slots
             next_toks = self._decode_active(active)
             self._n_steps += 1
+            if self._nan_detected:
+                # discard the whole step's tokens: no stream advances,
+                # nothing completes, the caller quarantines the server
+                return StepResult(admitted=admitted, produced=produced,
+                                  finished=list(sched.finished)[fin0:],
+                                  nan=True)
             survivors = []
             for st in active:
                 st.pos += 1
@@ -488,13 +542,17 @@ class InferenceServer:
     def cancel(self, uid: int, reason: str = "cancelled"):
         """Cancel a queued or in-flight request, freeing its cache pages
         immediately (``memory_report()`` returns to its pre-admission
-        level).  ``reason`` is ``"cancelled"`` or ``"timeout"`` and
-        becomes the lifecycle terminal event.  Returns the tokens the
-        request had generated so far (possibly empty), or None if the
-        uid is not live in the session."""
-        if reason not in ("cancelled", "timeout"):
-            raise ValueError(f"cancel reason must be 'cancelled' or "
-                             f"'timeout', got {reason!r}")
+        level).  ``reason`` is ``"cancelled"``, ``"timeout"``, or one of
+        the fault terminals ``"crashed"``/``"quarantined"`` used by the
+        fleet's failover path, and becomes the lifecycle terminal
+        event.  Returns the tokens the request had generated so far
+        (possibly empty), or None if the uid is not live in the
+        session."""
+        if reason not in ("cancelled", "timeout", "crashed",
+                          "quarantined"):
+            raise ValueError(f"cancel reason must be 'cancelled', "
+                             f"'timeout', 'crashed' or 'quarantined', "
+                             f"got {reason!r}")
         if self._sched is None:
             raise RuntimeError("no open session; call begin() first")
         sched = self._sched
@@ -548,6 +606,14 @@ class InferenceServer:
         self._sched = None
         return out
 
+    def live_uids(self) -> list:
+        """Every live (queued or resident) uid in FCFS seniority order;
+        the fleet's failover path walks this to recover a crashed or
+        quarantined replica's in-flight requests."""
+        if self._sched is None:
+            return []
+        return self._sched.live_uids()
+
     def result(self, uid: int):
         """Finished tokens for ``uid`` in the open session, else None."""
         if self._sched is not None and uid in self._sched.finished:
@@ -571,6 +637,9 @@ class InferenceServer:
                     "queued_tokens": 0, "active_tokens": 0}
         load["pages_in_use"] = int(
             self.backend.memory_report().get("pages_in_use", 0))
+        # decode-step progress counter: the fleet's health watchdog
+        # compares successive readings to detect a stalled replica
+        load["steps"] = self._n_steps
         return load
 
     def serve(self, requests) -> dict:
@@ -584,7 +653,13 @@ class InferenceServer:
         """
         self.begin(requests)
         while self.has_work:
-            self.step()
+            if self.step().nan:
+                # a solo server has no failover path: refuse to loop on
+                # poisoned logits (the fleet quarantines instead)
+                self.end()
+                raise RuntimeError(
+                    "NaN logits detected at the sampling host boundary; "
+                    "serving aborted (corrupted parameters or plan?)")
         return self.end()
 
     def _run_prefill(self, backend, handle, tokens_np):
@@ -642,10 +717,12 @@ class InferenceServer:
                 # every active row is greedy: argmax decode, none of the
                 # sort/Gumbel machinery (bit-identical to the full sampler)
                 path = "greedy"
-                next_tok, caches = self._decode_greedy(
+                next_tok, caches, bad = self._decode_greedy(
                     self.params, {"tokens": jnp.asarray(tokens)}, caches,
                     tables, jnp.asarray(pos), width)
                 self.backend.commit(caches)
+                if bool(np.asarray(bad)):
+                    self._flag_nan()
                 ids = np.asarray(next_tok)
                 return {st.slot: int(ids[st.slot]) for st in active}
             if self.sample_on_device:
@@ -667,13 +744,15 @@ class InferenceServer:
                 need_top_k = batch_need_top_k(
                     [st.request.sampling for st in active],
                     self.cfg.vocab, self._reg)
-                next_tok, caches = self._decode_sample(
+                next_tok, caches, bad = self._decode_sample(
                     self.params, {"tokens": jnp.asarray(tokens)}, caches,
                     tables, jnp.asarray(pos), jnp.asarray(temps),
                     jnp.asarray(topks), jnp.asarray(seeds),
                     jnp.asarray(uids), jnp.asarray(tidx), need_top_k,
                     width)
                 self.backend.commit(caches)
+                if bool(np.asarray(bad)):
+                    self._flag_nan()
                 ids = np.asarray(next_tok)
                 return {st.slot: int(ids[st.slot]) for st in active}
             logits, caches = self._decode(
@@ -683,6 +762,12 @@ class InferenceServer:
             rows = np.asarray(logits.astype(jnp.float32))[:, -1,
                                                           : self.cfg.vocab]
             step_end = time.perf_counter()   # np.asarray synced the step
+            if any(np.isnan(rows[st.slot]).any() for st in active):
+                self._flag_nan()
+                # don't sample from poisoned rows (the host sampler's
+                # softmax would propagate the NaN); step() discards the
+                # step's tokens anyway
+                return {st.slot: 0 for st in active}
             return {st.slot: sample_token(rows[st.slot],
                                           st.request.sampling, st.rng)
                     for st in active}

@@ -108,7 +108,14 @@ class Scheduler:
         self.preempt_counts: dict[int, int] = {}   # uid -> times preempted
 
     # ------------------------------------------------------------- submit
-    def submit(self, request: Request):
+    def submit(self, request: Request, *, front: bool = False,
+               trace_extra: Optional[dict] = None):
+        """Queue a request.  ``front=True`` enqueues at the FRONT of the
+        queue -- the fleet's failover path uses it so requests recovered
+        from a crashed replica keep their FCFS seniority on the
+        survivor.  ``trace_extra`` keys are merged into the ``enqueued``
+        lifecycle event (the fleet surfaces retry backoff delays and
+        failover causes this way)."""
         prompt = np.asarray(request.prompt)
         if prompt.ndim != 1 or prompt.size < 1:
             raise ValueError(f"request {request.uid}: prompt must be a "
@@ -125,11 +132,16 @@ class Scheduler:
                 for s in self.slots) or any(
                 e.request.uid == request.uid for e in self.pending):
             raise ValueError(f"duplicate request uid {request.uid}")
-        self.pending.append(PendingEntry(request))
+        entry = PendingEntry(request)
+        if front:
+            self.pending.appendleft(entry)
+        else:
+            self.pending.append(entry)
         if self.tracer is not None:
             self.tracer.event(request.uid, "enqueued",
                               n=int(prompt.size),
-                              arrival=int(request.arrival))
+                              arrival=int(request.arrival),
+                              **(trace_extra or {}))
 
     # ---------------------------------------------------------- admission
     def free_slot(self) -> Optional[int]:
@@ -195,10 +207,12 @@ class Scheduler:
         ``("active", state)`` if it occupied a decode slot (the caller
         -- the engine -- must have freed its cache handle already), or
         None if the uid is not live.  Emits a ``kind`` lifecycle event
-        (``cancelled`` or ``timeout``)."""
-        if kind not in ("cancelled", "timeout"):
-            raise ValueError(f"cancel kind must be 'cancelled' or "
-                             f"'timeout', got {kind!r}")
+        (``cancelled``/``timeout``, or the fault terminals ``crashed``/
+        ``quarantined`` used by the fleet's failover path)."""
+        if kind not in ("cancelled", "timeout", "crashed", "quarantined"):
+            raise ValueError(f"cancel kind must be 'cancelled', "
+                             f"'timeout', 'crashed' or 'quarantined', "
+                             f"got {kind!r}")
         for i, entry in enumerate(self.pending):
             if entry.request.uid == uid:
                 del self.pending[i]
@@ -214,6 +228,15 @@ class Scheduler:
                                       pages_held=0, slot=slot)
                 return "active", state
         return None
+
+    def live_uids(self) -> list[int]:
+        """Every live uid in FCFS seniority order: active slots by
+        admission order first, then the pending queue front-to-back.
+        The fleet's crash-recovery path walks this order so re-enqueues
+        onto a survivor preserve seniority."""
+        actives = sorted(self.active, key=lambda s: s.order)
+        return ([s.request.uid for s in actives]
+                + [e.request.uid for e in self.pending])
 
     # ------------------------------------------------------------ queries
     @property

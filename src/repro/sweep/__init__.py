@@ -14,10 +14,12 @@ from repro.sweep.front import (dominates, iso_accuracy_reduction,
                                uniform_cost)
 from repro.sweep.runner import (SweepRunner, SweepSpec, available_benches,
                                 register_bench)
-from repro.sweep.store import PlanStore, StoreError, plan_hash
+from repro.sweep.store import (PlanStore, StoreCorruptError,
+                               StoreError, plan_hash)
 
 __all__ = [
-    "PlanStore", "StoreError", "SweepRunner", "SweepSpec",
+    "PlanStore", "StoreCorruptError", "StoreError", "SweepRunner",
+    "SweepSpec",
     "available_benches", "dominates", "iso_accuracy_reduction",
     "iso_accuracy_report", "largest_gap", "next_lambda", "pareto_front",
     "plan_cost", "plan_hash", "register_bench", "uniform_cost",

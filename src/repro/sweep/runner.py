@@ -50,7 +50,8 @@ from repro.launch import steps as steps_lib
 from repro.models import cnn, lm
 from repro.optim import optimizers
 from repro.sweep import front as front_mod
-from repro.sweep.store import PlanStore, StoreError, plan_hash
+from repro.sweep.store import (PlanStore, StoreCorruptError, StoreError,
+                               plan_hash)
 
 # ---------------------------------------------------------------------------
 # cnn-track benchmark registry
@@ -267,10 +268,18 @@ class SweepRunner:
             lam = schedule[index]
             name = self.point_name(index)
             self._trace(index, "point_enqueued", lam=float(lam))
+            point = None
             if self.store.has(name):
-                point = self._load_point(index, name, lam)
-                loaded += 1
-            else:
+                try:
+                    point = self._load_point(index, name, lam)
+                    loaded += 1
+                except StoreCorruptError as e:
+                    # a corrupt entry must not kill the whole campaign:
+                    # move it aside and recompute the point instead
+                    qpath = self.store.quarantine(name)
+                    self._say(f"{name}: corrupt store entry ({e}); "
+                              f"quarantined to {qpath}, recomputing")
+            if point is None:
                 if max_points is not None and executed >= max_points:
                     budget_hit = True
                     self._say(f"stopping before {name}: max_points="

@@ -42,6 +42,14 @@ class StoreError(RuntimeError):
     """A PlanStore read/write failed in a way the caller should see."""
 
 
+class StoreCorruptError(StoreError):
+    """A stored file exists but cannot be trusted: unparsable entry
+    JSON, missing/truncated plan arrays, or a content-hash mismatch.
+    Distinct from plain :class:`StoreError` (missing entries, invalid
+    names, spec mismatches) so resume paths can quarantine-and-recompute
+    corruption without masking real usage errors."""
+
+
 def plan_hash(plan: CompressionPlan) -> str:
     """Content hash of everything that affects a plan's deployment.
 
@@ -118,7 +126,8 @@ class PlanStore:
         if not os.path.isdir(self.entries_dir):
             return []
         return sorted(f[:-5] for f in os.listdir(self.entries_dir)
-                      if f.endswith(".json"))
+                      if f.endswith(".json")
+                      and not f.endswith(".quarantined.json"))
 
     def has(self, name: str) -> bool:
         return os.path.exists(self._entry_path(name))
@@ -131,12 +140,16 @@ class PlanStore:
             with open(path) as f:
                 entry = json.load(f)
         except (json.JSONDecodeError, OSError) as e:
-            raise StoreError(
+            raise StoreCorruptError(
                 f"entry {name!r} is corrupt ({path}): {e}") from e
+        if not isinstance(entry, dict):
+            raise StoreCorruptError(
+                f"entry {name!r} is corrupt ({path}): not a JSON object")
         for key in ("name", "plan", "metrics", "costs", "lineage"):
             if key not in entry:
-                raise StoreError(f"entry {name!r} is corrupt ({path}): "
-                                 f"missing field {key!r}")
+                raise StoreCorruptError(
+                    f"entry {name!r} is corrupt ({path}): "
+                    f"missing field {key!r}")
         return entry
 
     def entries(self) -> list[dict]:
@@ -148,18 +161,18 @@ class PlanStore:
         if not os.path.exists(stem + ".json"):
             raise StoreError(f"no plan {h} in store {self.root}")
         if not os.path.exists(stem + ".npz"):
-            raise StoreError(
+            raise StoreCorruptError(
                 f"plan {h} is missing its .npz array file beside "
                 f"{stem}.json (partial copy or interrupted write?)")
         try:
             plan = CompressionPlan.load(stem)
         except Exception as e:
-            raise StoreError(
+            raise StoreCorruptError(
                 f"plan {h} is corrupt or truncated ({stem}.npz): "
                 f"{e}") from e
         actual = plan_hash(plan)
         if actual != h:
-            raise StoreError(
+            raise StoreCorruptError(
                 f"plan {h} failed its content-hash check (stored arrays "
                 f"hash to {actual}): store was modified or truncated")
         return plan
@@ -197,13 +210,34 @@ class PlanStore:
             pts, score=lambda e: e["metrics"][score_key],
             cost=lambda e: e["costs"][cost_key])
 
-    def verify(self) -> list[str]:
+    def quarantine(self, name: str) -> str:
+        """Move a named entry aside as ``<name>.quarantined.json`` (an
+        existing quarantine file for the name is overwritten).  The name
+        disappears from :meth:`names`/:meth:`has`, so a resuming sweep
+        recomputes the point; the bad bytes stay on disk for forensics.
+        Returns the quarantine path."""
+        path = self._entry_path(name)
+        if not os.path.exists(path):
+            raise StoreError(f"no entry {name!r} in store {self.root}")
+        qpath = os.path.join(self.entries_dir,
+                             f"{name}.quarantined.json")
+        os.replace(path, qpath)
+        return qpath
+
+    def verify(self, repair: bool = False) -> list[str]:
         """Integrity sweep: every entry parses and its plan loads with a
-        matching content hash.  Returns problem strings (empty = clean)."""
+        matching content hash.  Returns problem strings (empty = clean).
+        ``repair=True`` additionally quarantines each corrupt entry
+        (:meth:`quarantine`) so subsequent reads see a clean store."""
         problems = []
         for name in self.names():
             try:
                 self.load(name)
+            except StoreCorruptError as e:
+                msg = str(e)
+                if repair:
+                    msg += f" [quarantined -> {self.quarantine(name)}]"
+                problems.append(msg)
             except StoreError as e:
                 problems.append(str(e))
         return problems

@@ -1,0 +1,463 @@
+"""Chaos subsystem tests: the fault-schedule parser and injector,
+parameter poisoning, the health monitor's observational state machine,
+retry backoff, and the headline robustness invariant -- a mid-decode
+replica crash (or NaN quarantine) with failover leaves every surviving
+and recovered request's token stream byte-identical to the fault-free
+run, across dense/paged caches and float/plan-quantized tiers."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import chaos
+from repro.chaos import inject as chaos_inject
+from repro.configs import registry
+from repro.fleet import (HEALTH_STATES, Fleet, FleetRequest,
+                         HealthMonitor, Replica, TierSpec)
+from repro.models import lm
+from repro.obs import RequestTracer
+from repro.obs.validate import validate_trace_lines
+from repro.serve import engine
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = registry.get("llama3.2-1b-smoke")
+    return cfg, lm.init_params(cfg, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def schema():
+    with open("tests/obs_schema.json") as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def fleets(llama):
+    """Homogeneous two-replica fleets (recovery must land on an
+    identical tier for byte-identity), built lazily and cached per
+    (cache, plan) combo so each compiles once per module."""
+    cfg, params = llama
+    cache: dict = {}
+
+    def get(backend: str, plan_kind: str) -> Fleet:
+        key = (backend, plan_kind)
+        if key not in cache:
+            plan = (None if plan_kind == "float"
+                    else engine.synthetic_plan(cfg, params, bits=None,
+                                               seed=0))
+            pairs = []
+            for name in ("a", "b"):
+                tier = TierSpec(name=name, plan=plan, step_ms=8.0,
+                                quality=16.0)
+                srv = engine.InferenceServer(
+                    cfg, params, plan=plan, max_len=64, max_batch=2,
+                    cache=backend, page_size=8, pages=None)
+                pairs.append((tier, srv))
+            cache[key] = Fleet(pairs, policy="round_robin")
+        return cache[key]
+
+    return get
+
+
+def _trace(cfg, n=6, *, deadline_ms=None, retry_budget=1, max_tokens=8):
+    rng = np.random.default_rng(0)
+    return [FleetRequest(
+        request=Request(
+            uid=i,
+            prompt=np.asarray(rng.integers(1, cfg.vocab, 6), np.int32),
+            sampling=SamplingParams(temperature=0.8, top_k=8,
+                                    max_tokens=max_tokens, seed=7)),
+        arrival_ms=5.0 * i, deadline_ms=deadline_ms,
+        retry_budget=retry_budget) for i in range(n)]
+
+
+def _run(flt, cfg, *, chaos_sched=None, failover=True, **kw):
+    flt.chaos = (chaos.ChaosInjector(chaos_sched)
+                 if chaos_sched is not None else None)
+    flt.failover = failover
+    try:
+        return flt.run(_trace(cfg, **kw))
+    finally:
+        flt.chaos = None
+        flt.failover = True
+
+
+# ---------------------------------------------------------------------------
+# schedule parser + injector
+# ---------------------------------------------------------------------------
+
+class TestParser:
+    def test_same_seed_same_schedule(self):
+        a = chaos.parse_chaos("crash+slow", targets=["x", "y"], seed=3)
+        b = chaos.parse_chaos("crash+slow", targets=["x", "y"], seed=3)
+        assert a == b
+        c = chaos.parse_chaos("crash+slow", targets=["x", "y"], seed=4)
+        assert a != c
+
+    def test_pinned_fields_stay_pinned(self):
+        (spec,) = chaos.parse_chaos("crash@40-200:x", targets=["x", "y"],
+                                    seed=0)
+        assert spec.kind == "crash" and spec.target == "x"
+        assert spec.t_ms == 40.0 and spec.until_ms == 200.0
+        # pinning one token's fields must not shift another's draws
+        a = chaos.parse_chaos("crash@40:x+slow", targets=["x"], seed=1)
+        b = chaos.parse_chaos("crash@90:x+slow", targets=["x"], seed=1)
+        assert a[1] == b[1]
+
+    def test_modifiers(self):
+        (slow,) = chaos.parse_chaos("slow@10-50:x6:y", targets=["y"],
+                                    seed=0)
+        assert slow.factor == 6.0 and slow.target == "y"
+        (pool,) = chaos.parse_chaos("pool_pressure@10-50:p3",
+                                    targets=["x"], seed=0)
+        assert pool.pages == 3
+
+    def test_errors(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            chaos.parse_chaos("melt", targets=["x"], seed=0)
+        with pytest.raises(ValueError, match="target"):
+            chaos.parse_chaos("crash:nope", targets=["x"], seed=0)
+        with pytest.raises(ValueError):
+            chaos.FaultSpec(kind="slow", target="x", t_ms=50.0,
+                            until_ms=10.0)
+
+    def test_describe_round_trips_fields(self):
+        (spec,) = chaos.parse_chaos("crash", targets=["x"], seed=0,
+                                    horizon_ms=1000.0)
+        assert "crash" in spec.describe() and "x" in spec.describe()
+        assert 200.0 <= spec.t_ms <= 500.0     # [0.2, 0.5] * horizon
+
+
+class TestInjector:
+    def test_due_is_once_and_ordered(self):
+        sched = [
+            chaos.FaultSpec(kind="slow", target="x", t_ms=10.0,
+                            until_ms=50.0, factor=2.0),
+            chaos.FaultSpec(kind="crash", target="y", t_ms=30.0,
+                            until_ms=90.0),
+        ]
+        inj = chaos.ChaosInjector(sched)
+        assert inj.next_time() == 10.0
+        assert [p for p, _ in inj.due(10.0)] == ["inject"]
+        assert inj.due(10.0) == []                     # delivered once
+        assert inj.next_time() == 30.0
+        got = inj.due(100.0)
+        assert [(p, s.kind) for p, s in got] == [
+            ("inject", "crash"), ("restore", "slow"),
+            ("restore", "crash")]
+        assert inj.exhausted and inj.next_time() is None
+
+    def test_poison_params_and_undo(self):
+        class Srv:
+            pass
+        srv = Srv()
+        w = np.ones((4, 4), np.float32)
+        srv.params = {"blocks": [{"attn": {"wq": w}}],
+                      "emb": np.ones((8, 4), np.float32)}
+        undo = chaos_inject.poison_params(srv)
+        assert np.isnan(srv.params["blocks"][0]["attn"]["wq"]).all()
+        # only the first matching leaf is poisoned; nothing else moves
+        assert not np.isnan(srv.params["emb"]).any()
+        assert not np.isnan(w).any()           # original untouched
+        undo()
+        assert srv.params["blocks"][0]["attn"]["wq"] is w
+
+    def test_poison_params_hits_packed_scales(self, llama):
+        cfg, params = llama
+        srv = engine.InferenceServer(
+            cfg, params,
+            plan=engine.synthetic_plan(cfg, params, bits=8),
+            max_len=32, max_batch=1, cache="dense")
+        old = srv.params
+        undo = chaos_inject.poison_params(srv)
+        leaves = jax.tree_util.tree_leaves(srv.params["blocks"])
+        assert any(np.isnan(np.asarray(x)).any() for x in leaves
+                   if np.asarray(x).dtype.kind == "f")
+        undo()
+        assert srv.params is old
+
+
+# ---------------------------------------------------------------------------
+# health monitor (observational: driven by fake load reports)
+# ---------------------------------------------------------------------------
+
+class _FakeServer:
+    def __init__(self):
+        self.load = {"queued": 0, "active": 1, "queued_tokens": 0,
+                     "active_tokens": 4, "pages_in_use": 1,
+                     "pages_free": 3, "steps": 0}
+
+    def load_report(self):
+        return dict(self.load)
+
+
+def _fake_rep(step_ms=8.0):
+    return Replica(tier=TierSpec(name="r", plan=None, step_ms=step_ms,
+                                 quality=16.0), server=_FakeServer())
+
+
+class TestHealthMonitor:
+    def test_watchdog_degrades_and_heals(self):
+        hm = HealthMonitor(watchdog_factor=3.0)
+        rep = _fake_rep()
+        hm.start(["r"])
+        t = 0.0
+        for _ in range(3):                    # healthy cadence: 8 ms
+            rep.server.load["steps"] += 1
+            t += 8.0
+            hm.observe(rep, t)
+        assert hm.state("r") == "healthy"
+        rep.server.load["steps"] += 1
+        t += 50.0                             # stalled: 50 ms spacing
+        hm.observe(rep, t)
+        assert hm.state("r") == "degraded"
+        assert hm.eta_multiplier("r") == pytest.approx(50.0 / 8.0)
+        rep.server.load["steps"] += 1
+        t += 8.0
+        hm.observe(rep, t)
+        assert hm.state("r") == "healthy"
+        assert hm.eta_multiplier("r") == 1.0
+
+    def test_idle_gap_is_not_a_stall(self):
+        hm = HealthMonitor()
+        rep = _fake_rep()
+        hm.start(["r"])
+        rep.server.load["steps"] = 5
+        hm.observe(rep, 8.0)
+        rep.server.load.update(active=0, queued=0)   # burst drained
+        hm.observe(rep, 500.0)
+        rep.server.load.update(active=1, steps=6)    # next burst
+        hm.observe(rep, 508.0)
+        assert hm.state("r") == "healthy"
+
+    def test_down_warming_probe_cycle(self):
+        hm = HealthMonitor()
+        rep = _fake_rep()
+        hm.start(["r"])
+        rep.down = True
+        hm.observe(rep, 10.0)
+        assert hm.state("r") == "down"
+        assert not hm.routable("r")
+        rep.down = False                      # session reopened
+        hm.observe(rep, 20.0)
+        assert hm.state("r") == "warming"
+        assert not hm.routable("r")           # gated on the probe
+        hm.observe(rep, 25.0)
+        assert hm.state("r") == "warming"
+        hm.probe_done("r", True, 30.0)
+        assert hm.state("r") == "healthy" and hm.routable("r")
+
+    def test_draining_on_pool_starvation(self):
+        hm = HealthMonitor()
+        rep = _fake_rep()
+        hm.start(["r"])
+        rep.server.load.update(pages_free=0, queued=2)
+        hm.observe(rep, 5.0)
+        assert hm.state("r") == "draining" and not hm.routable("r")
+        rep.server.load.update(pages_free=2)
+        hm.observe(rep, 10.0)
+        assert hm.state("r") == "healthy"
+
+    def test_states_and_validation(self):
+        hm = HealthMonitor()
+        hm.start(["r"])
+        with pytest.raises(ValueError, match="unknown health state"):
+            hm.mark("r", "zombie", 0.0)
+        assert set(HEALTH_STATES) == {"healthy", "degraded", "down",
+                                      "draining", "warming"}
+        with pytest.raises(ValueError, match="watchdog_factor"):
+            HealthMonitor(watchdog_factor=1.0)
+
+
+# ---------------------------------------------------------------------------
+# trace grammar: fault terminals + recovered
+# ---------------------------------------------------------------------------
+
+class TestFaultLifecycleGrammar:
+    def test_crash_recover_episode_chain(self):
+        ok = ["enqueued", "admitted", "prefilled", "first_token",
+              "crashed", "recovered", "enqueued", "admitted",
+              "prefilled", "first_token", "decode", "finished"]
+        assert RequestTracer.check_lifecycle(ok) is None
+
+    def test_stream_may_end_at_recovered(self):
+        # per-replica stream: the marker lives on the struck replica's
+        # tracer, the re-enqueue on the survivor's
+        assert RequestTracer.check_lifecycle(
+            ["enqueued", "crashed", "recovered"]) is None
+
+    def test_recovered_needs_fault_terminal(self):
+        err = RequestTracer.check_lifecycle(
+            ["enqueued", "timeout", "recovered", "enqueued",
+             "finished"])
+        assert err is not None and "recovered" in err
+
+    def test_fault_terminal_ends_episode(self):
+        assert RequestTracer.check_lifecycle(
+            ["enqueued", "quarantined"]) is None
+        err = RequestTracer.check_lifecycle(
+            ["enqueued", "crashed", "decode"])
+        assert err is not None
+
+
+# ---------------------------------------------------------------------------
+# the headline invariant
+# ---------------------------------------------------------------------------
+
+class TestCrashByteIdentity:
+    """A mid-decode crash with failover must not change a single token:
+    per-uid sampling streams are pure functions of (seed, uid,
+    token_index), so recompute-style recovery on an identical tier
+    replays them byte-identically."""
+
+    @pytest.mark.parametrize("backend,plan_kind", [
+        ("dense", "float"), ("dense", "plan"),
+        ("paged", "float"), ("paged", "plan")])
+    def test_crash_recovery_is_byte_identical(self, fleets, llama,
+                                              schema, backend,
+                                              plan_kind):
+        cfg, _ = llama
+        flt = fleets(backend, plan_kind)
+        ref = _run(flt, cfg)
+        assert all(r.status == "finished" for r in ref.values())
+        sched = [chaos.FaultSpec(kind="crash", target="a", t_ms=30.0,
+                                 until_ms=120.0)]
+        got = _run(flt, cfg, chaos_sched=sched)
+        recovered = [u for u, r in got.items()
+                     if any(a.cause == "recovered:crashed"
+                            for a in r.attempts)]
+        assert recovered, "the crash must catch requests in flight"
+        for uid, r in got.items():
+            assert r.status == "finished"
+            assert np.array_equal(r.tokens, ref[uid].tokens), uid
+        # the struck replica came back through warming -> probe
+        assert flt.health.states() == {"a": "healthy", "b": "healthy"}
+        # zero page leaks: every replica's pool drained back to empty
+        for rep in flt.replicas:
+            mem = rep.server.backend.memory_report()
+            assert mem.get("pages_in_use", 0) == 0
+            assert mem.get("pages_withheld", 0) == 0
+        # merged + per-replica streams satisfy the lifecycle grammar
+        lines = [json.dumps(d, sort_keys=True)
+                 for d in flt.trace_events()]
+        assert validate_trace_lines(lines, schema) == []
+        for rep in flt.replicas:
+            evs = [json.dumps(e.to_json(), sort_keys=True)
+                   for e in rep.server.obs.tracer.events]
+            assert validate_trace_lines(evs, schema) == []
+
+    def test_nan_quarantine_is_byte_identical(self, fleets, llama,
+                                              schema):
+        """The NaN-poisoned plan trips the engine's sampling-boundary
+        guard; the poisoned step's tokens are discarded, so recovered
+        streams still match the fault-free run bit-for-bit."""
+        cfg, _ = llama
+        flt = fleets("paged", "plan")
+        ref = _run(flt, cfg)
+        sched = [chaos.FaultSpec(kind="nan_plan", target="a", t_ms=30.0,
+                                 until_ms=150.0)]
+        got = _run(flt, cfg, chaos_sched=sched)
+        assert any(a.cause == "recovered:quarantined"
+                   for r in got.values() for a in r.attempts)
+        for uid, r in got.items():
+            assert np.array_equal(r.tokens, ref[uid].tokens), uid
+        snap = flt.registry.snapshot()
+        assert "fault_nan_detected_total" in snap
+        lines = [json.dumps(d, sort_keys=True)
+                 for d in flt.trace_events()]
+        assert validate_trace_lines(lines, schema) == []
+
+
+# ---------------------------------------------------------------------------
+# failover off, pool pressure, slow faults, backoff
+# ---------------------------------------------------------------------------
+
+class TestFaultBehaviors:
+    def test_no_failover_requests_die_crashed(self, fleets, llama):
+        cfg, _ = llama
+        flt = fleets("paged", "float")
+        sched = [chaos.FaultSpec(kind="crash", target="a", t_ms=30.0,
+                                 until_ms=120.0)]
+        got = _run(flt, cfg, chaos_sched=sched, failover=False,
+                   deadline_ms=500.0)
+        crashed = [r for r in got.values() if r.status == "crashed"]
+        assert crashed
+        assert all(not r.deadline_met for r in crashed)
+        assert all(r.status in ("finished", "crashed")
+                   for r in got.values())
+
+    def test_pool_pressure_withholds_and_restores(self, fleets, llama):
+        cfg, _ = llama
+        flt = fleets("paged", "float")
+        ref = _run(flt, cfg)
+        sched = [chaos.FaultSpec(kind="pool_pressure", target="a",
+                                 t_ms=10.0, until_ms=100.0, pages=100)]
+        got = _run(flt, cfg, chaos_sched=sched)
+        for uid, r in got.items():       # squeezed, never corrupted
+            assert r.status == "finished"
+            assert np.array_equal(r.tokens, ref[uid].tokens), uid
+        for rep in flt.replicas:
+            assert rep.server.backend.memory_report().get(
+                "pages_withheld", 0) == 0
+
+    def test_slow_fault_degrades_then_heals(self, fleets, llama):
+        cfg, _ = llama
+        flt = fleets("paged", "float")
+        sched = [chaos.FaultSpec(kind="slow", target="a", t_ms=20.0,
+                                 until_ms=200.0, factor=6.0)]
+        got = _run(flt, cfg, chaos_sched=sched)
+        assert all(r.status == "finished" for r in got.values())
+        snap = flt.registry.snapshot()
+        series = snap["health_transitions_total"]["series"]
+        states = {(s["labels"]["replica"], s["labels"]["state"])
+                  for s in series}
+        assert ("a", "degraded") in states
+        assert flt.health.states()["a"] == "healthy"
+
+    def test_retry_backoff_is_bounded_exponential(self, fleets, llama):
+        cfg, _ = llama
+        flt = fleets("paged", "float")
+        got = _run(flt, cfg, n=2, deadline_ms=40.0, retry_budget=3,
+                   max_tokens=12)
+        delays = [ev["retry_delay_ms"] for ev in flt.trace_events()
+                  if ev["kind"] == "enqueued"
+                  and "retry_delay_ms" in ev]
+        assert delays, "the tight deadline must force retries"
+        # doubling from the base, capped
+        for i, d in enumerate(sorted(set(delays))):
+            assert d == min(25.0 * 2 ** i, 400.0)
+        for rec in got.values():
+            for prev, nxt in zip(rec.attempts, rec.attempts[1:]):
+                assert nxt.t_start >= prev.t_start + 25.0
+
+    def test_store_corrupt_is_not_a_fleet_fault(self, fleets, llama):
+        cfg, _ = llama
+        flt = fleets("paged", "float")
+        sched = [chaos.FaultSpec(kind="store_corrupt", target="a",
+                                 t_ms=1.0)]
+        with pytest.raises(ValueError, match="PlanStore"):
+            _run(flt, cfg, chaos_sched=sched)
+
+
+class TestEngineNaNGuard:
+    def test_solo_serve_raises_on_poisoned_params(self, llama):
+        cfg, params = llama
+        srv = engine.InferenceServer(cfg, params, max_len=32,
+                                     max_batch=1, cache="dense")
+        req = Request(uid=0,
+                      prompt=np.asarray([1, 2, 3], np.int32),
+                      sampling=SamplingParams(max_tokens=4))
+        out = srv.serve([req])          # sane params: fine
+        assert out[0].size == 4
+        undo = chaos_inject.poison_params(srv)
+        try:
+            with pytest.raises(RuntimeError, match="NaN"):
+                srv.serve([req])
+        finally:
+            undo()
+        out2 = srv.serve([req])         # restored: identical again
+        assert np.array_equal(out2[0], out[0])

@@ -174,10 +174,13 @@ class TestScheduler:
               n_req=pt.integers(4, 9))
     def test_fcfs_property_under_mixed_ops(self, seed, max_batch, n_req):
         """Strict FCFS survives any interleaving of admissions,
-        completions, preemptions, cancellations and timeouts: each
-        admission must pop the model queue's exact head (preempted
-        requests re-admit from the FRONT, fresh ones in submit order,
-        cancelled ones never), and load() mirrors the model throughout.
+        completions, preemptions, cancellations, timeouts and replica
+        crash/recover cycles: each admission must pop the model queue's
+        exact head (preempted requests re-admit from the FRONT, fresh
+        ones in submit order, cancelled ones never), a crash that
+        cancels every live request and front-re-enqueues them in
+        reverse seniority (the fleet's failover path) restores the
+        exact pre-crash order, and load() mirrors the model throughout.
         Complements the trace-replay FRONT-order check in test_obs."""
         rng = np.random.default_rng(seed)
         sched = Scheduler(max_batch=max_batch, max_len=32)
@@ -186,10 +189,12 @@ class TestScheduler:
         queue = [uid for uid in range(n_req)]     # model: exact order
         active: dict[int, object] = {}            # slot -> uid
         done = set()
+        admit_seq = 0                             # admission order
         for _ in range(60):
             if not queue and not active:
                 break
-            op = rng.choice(["admit", "complete", "preempt", "cancel"])
+            op = rng.choice(["admit", "complete", "preempt", "cancel",
+                             "crash"])
             if op == "admit":
                 res = sched.pop_admissible(0)
                 if len(active) == max_batch or not queue:
@@ -200,8 +205,28 @@ class TestScheduler:
                     f"admitted {entry.request.uid}, head was {queue}"
                 queue.pop(0)
                 st = _dummy_state(entry, slot)
+                st.order = admit_seq
+                admit_seq += 1
                 sched.activate(slot, st)
                 active[slot] = st
+            elif op == "crash" and (queue or active):
+                # seniority: actives by admission order, then queue
+                model_live = ([st.request.uid for st in
+                               sorted(active.values(),
+                                      key=lambda s: s.order)] + queue)
+                assert sched.live_uids() == model_live
+                for uid in model_live:
+                    assert sched.cancel(uid, kind="crashed") is not None
+                # zero leaks: every slot must be released, else its
+                # cache handle (freed keyed on slot state) would strand
+                assert sched.active == []
+                active.clear()
+                # recompute-style recovery: fresh requests, re-enqueued
+                # to the FRONT in reverse seniority -> original order
+                for uid in reversed(model_live):
+                    sched.submit(self._req(uid), front=True)
+                queue = list(model_live)
+                assert [e.request.uid for e in sched.pending] == queue
             elif op == "complete" and active:
                 slot = int(rng.choice(list(active)))
                 done.add(active.pop(slot).request.uid)

@@ -2,7 +2,8 @@
 dedup, every failure path), front maintenance + adaptive bisection math,
 SweepSpec validation/identity, warm-start cnn sweeps with obs artifacts
 through the validator, kill/resume byte-identity of the store (the
-acceptance criterion), lm-track sweeps feeding the serving fleet via
+acceptance criterion), corrupt-entry quarantine + recompute resume
+(the ``store_corrupt`` fault), lm-track sweeps feeding the fleet via
 ``store:`` tiers, and plan provenance round-trips."""
 import json
 import os
@@ -15,6 +16,7 @@ from repro import api
 from repro import fleet as fleet_mod
 from repro import obs
 from repro import sweep
+from repro.chaos import inject as chaos_inject
 from repro.configs import registry as configs_registry
 from repro.launch.fleet import build_fleet, build_tier, build_tiers
 from repro.models import lm
@@ -188,6 +190,39 @@ class TestPlanStore:
                            match="content-hash check"):
             store.load("a")
 
+    def test_corrupt_error_typing(self, tmp_path, plans):
+        """Corruption is a distinct subclass so resume paths can
+        quarantine it without masking usage errors (missing entries,
+        bad names), which stay plain StoreError."""
+        assert issubclass(sweep.StoreCorruptError, sweep.StoreError)
+        store = sweep.PlanStore(str(tmp_path))
+        store.put(plans[0], "a", costs={"size": 1.0})
+        with open(store._entry_path("a"), "w") as f:
+            f.write("{not json")
+        with pytest.raises(sweep.StoreCorruptError):
+            store.entry("a")
+        # a merely missing entry is NOT corruption
+        with pytest.raises(sweep.StoreError) as ei:
+            store.entry("zz")
+        assert not isinstance(ei.value, sweep.StoreCorruptError)
+
+    def test_verify_repair_quarantines(self, tmp_path, plans):
+        store = sweep.PlanStore(str(tmp_path))
+        store.put(plans[0], "good", costs={"size": 1.0})
+        store.put(plans[1], "bad", costs={"size": 2.0})
+        chaos_inject.corrupt_store_entry(store, "bad")
+        # repair=False (default) reports but leaves the store as-is
+        problems = store.verify()
+        assert len(problems) == 1 and "bad" in problems[0]
+        assert store.names() == ["bad", "good"]
+        problems = store.verify(repair=True)
+        assert len(problems) == 1 and "quarantined" in problems[0]
+        qpath = os.path.join(store.entries_dir, "bad.quarantined.json")
+        assert os.path.exists(qpath)            # bytes kept for forensics
+        assert store.names() == ["good"]        # name gone from the store
+        assert not store.has("bad")
+        assert store.verify() == []             # clean after repair
+
     def test_entry_bytes_deterministic(self, tmp_path, plans):
         """put() twice -> byte-identical entry file (no timestamps,
         sorted keys): the foundation of the resume byte-identity."""
@@ -356,6 +391,29 @@ class TestCnnSweep:
         # restarts from its checkpoint mid-point
         _, store, s2, _ = run_sweep(cnn_spec(), root)
         assert s2["loaded"] == 1 and s2["executed"] >= 1
+        assert store_fingerprint(store) == store_fingerprint(ref_store)
+
+    def test_corrupt_entry_resume_byte_identical(self, cnn_ref,
+                                                 tmp_path):
+        """The robustness criterion: corrupt a completed point's entry
+        (the ``store_corrupt`` fault), resume, and the runner
+        quarantines the bad bytes and recomputes the point -- ending
+        byte-identical (entry bytes, plan hashes, front) to the
+        uninterrupted run's store."""
+        _, ref_store, _, _ = cnn_ref
+        root = str(tmp_path / "corrupted")
+        run_sweep(cnn_spec(), root)
+        store = sweep.PlanStore(os.path.join(root, "store"))
+        victim = store.names()[0]
+        chaos_inject.corrupt_store_entry(store, victim)
+        with pytest.raises(sweep.StoreCorruptError):
+            store.entry(victim)
+        # resume must NOT die on the corrupt entry: quarantine + redo
+        _, store, s2, _ = run_sweep(cnn_spec(), root)
+        assert s2["executed"] >= 1              # the victim recomputed
+        assert os.path.exists(os.path.join(
+            store.entries_dir, f"{victim}.quarantined.json"))
+        assert store.verify() == []
         assert store_fingerprint(store) == store_fingerprint(ref_store)
 
     def test_max_points_budget(self, tmp_path):
