@@ -16,6 +16,15 @@ step inputs from the cache backend -- vs. ``step_us_per_step`` -- the
 jitted decode itself), which is where the device-resident block tables
 show up: paged gather no longer rebuilds host tables per step.
 
+Since PR 10 every row also carries a **prefill-latency split**
+(``prefill_ms_p50/p95/p99``: tracer-measured admitted->prefilled wall
+per admission), and a ``prefill-bucketed-baseline`` row reconstructs the
+retired pre-PR 10 admission path (prompt padded to a page-count bucket,
+dense flash prefill, then the ``_scatter_pages`` round-trip of dense KV
+into pool pages) on the same workload lengths -- the paged row's
+``prefill_vs_bucketed`` block records the TTFT delta and asserts the
+paged path is no slower.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--arch ...] \
         [--out BENCH_serve.json]
 
@@ -33,14 +42,18 @@ import time
 import jax
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.configs import registry
+from repro.launch import steps
 from repro.models import lm
 from repro.obs import Observability, percentiles
+from repro.serve import cache as cache_mod
 from repro.serve import engine
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 
 def machine_baseline(repeats=5, n=50, dim=256):
@@ -115,6 +128,19 @@ def _row_from(stats, name, cache, wall, out, plan):
     return row, out
 
 
+def _prefill_latencies(tracer):
+    """Seconds from admission to prefill-complete, one entry per
+    admission (a preempted request's re-prefill counts again)."""
+    t_adm: dict = {}
+    out = []
+    for ev in tracer.events:
+        if ev.kind == "admitted":
+            t_adm[ev.uid] = ev.t
+        elif ev.kind == "prefilled" and ev.uid in t_adm:
+            out.append(ev.t - t_adm.pop(ev.uid))
+    return out
+
+
 def _add_latency_split(row, server, requests, wall, repeats=3):
     """Per-request latency split from the request tracer.
 
@@ -136,9 +162,11 @@ def _add_latency_split(row, server, requests, wall, repeats=3):
             traced_wall = min(traced_wall, time.time() - t0)
         ttft = percentiles(obs.tracer.ttfts())
         tok = percentiles(obs.tracer.token_latencies())
+        pre = percentiles(_prefill_latencies(obs.tracer))
         for p in ("p50", "p95", "p99"):
             row[f"ttft_ms_{p}"] = round(ttft[p] * 1e3, 3)
             row[f"token_ms_{p}"] = round(tok[p] * 1e3, 3)
+            row[f"prefill_ms_{p}"] = round(pre[p] * 1e3, 3)
         row["obs_overhead_pct"] = round(
             (traced_wall - wall) / wall * 100.0, 2)
     finally:
@@ -207,6 +235,103 @@ def bench_pair(name, cfg, params, plan, requests, max_len, max_batch,
     return row_d, row_p
 
 
+def bucketed_prefill_baseline(cfg, params, prompt_lens, n_requests,
+                              max_len, max_batch, page_size, repeats=10):
+    """Per-admission prefill wall, measured identically for both paths.
+
+    - **bucketed** reconstructs the retired pre-PR 10 admission path:
+      prompt padded on the host to a page-count bucket, dense flash
+      prefill at the bucket length (one compile per bucket), then the
+      ``_scatter_pages`` round-trip writing the dense per-layer KV into
+      pool pages via a separately dispatched jit.
+    - **paged** is the live engine admission (``_run_prefill``: pad to
+      a q-chunk multiple, one pool-donating jit reading the page pool
+      in place, pointer-swap insert).
+
+    Both timed loops include the per-admission host work (padding,
+    operand preparation, dispatch) -- that is what an admission costs
+    in TTFT.  Returns the baseline row carrying both measurements."""
+    n_pages = (max_batch * max_len // page_size) // 2
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, size=max_len).astype(np.int32)
+
+    # --- retired bucketed path, reconstructed -------------------------
+    backend = cache_mod.make_backend(
+        "paged", cfg, max_batch, max_len, page_size=page_size,
+        n_pages=n_pages)
+    pools = {ln: c["kv"] for ln, c in backend.caches.items() if "kv" in c}
+    prefill = jax.jit(steps.make_prefill_step(cfg))
+
+    def scatter(pools, dense_kv, pages):
+        # leaves are (n_sb, B=1, spad, hkv, hd) dense vs.
+        # (n_sb, n_pages + 1, page_size, hkv, hd) pool
+        def put(pool, kv):
+            n = pages.shape[0]
+            return pool.at[:, pages].set(
+                kv[:, 0].reshape(kv.shape[0], n, page_size,
+                                 *kv.shape[3:]).astype(pool.dtype))
+        return jax.tree.map(put, pools, dense_kv)
+
+    scatter_j = jax.jit(scatter, donate_argnums=(0,))
+    per_len = {}
+    for s in sorted(set(prompt_lens)):
+        spad = -(-s // page_size) * page_size          # page bucket
+        best = float("inf")
+        for i in range(repeats + 1):                   # first = compile
+            t0 = time.time()
+            padded = np.zeros(spad, np.int32)          # host bucket pad
+            padded[:s] = toks[:s]
+            logits, pc = prefill(params,
+                                 {"tokens": jnp.asarray(padded)[None]})
+            pages = jnp.arange(1, spad // page_size + 1,
+                               dtype=jnp.int32)
+            pools = scatter_j(
+                pools, {ln: pc[ln]["kv"] for ln in pools}, pages)
+            jax.block_until_ready((logits, pools))
+            if i > 0:
+                best = min(best, time.time() - t0)
+        per_len[s] = best
+
+    # --- live paged admission (the engine's _run_prefill) -------------
+    srv = engine.InferenceServer(cfg, params, max_len=max_len,
+                                 max_batch=max_batch, cache="paged",
+                                 page_size=page_size, pages=n_pages)
+    srv.begin()
+    pbackend = srv.backend
+    per_len_paged = {}
+    for s in sorted(set(prompt_lens)):
+        handle = pbackend.alloc(uid=s, slot=0, n_prompt=s)
+        best = float("inf")
+        for i in range(repeats + 1):
+            t0 = time.time()
+            logits = srv._run_prefill(pbackend, handle, toks[:s])
+            jax.block_until_ready(logits)
+            if i > 0:
+                best = min(best, time.time() - t0)
+        pbackend.free(handle)
+        per_len_paged[s] = best
+
+    # replicate per-admission walls to the workload's composition so the
+    # percentiles describe the default workload's admission mix
+    def mix(per):
+        return percentiles([per[prompt_lens[i % len(prompt_lens)]]
+                            for i in range(n_requests)])
+
+    pre, pre_paged = mix(per_len), mix(per_len_paged)
+    row = {"name": "prefill-bucketed-baseline", "cache": "paged",
+           "page_size": page_size,
+           "prefill_us_per_admission": {
+               str(s): round(w * 1e6, 1) for s, w in per_len.items()},
+           "paged_prefill_us_per_admission": {
+               str(s): round(w * 1e6, 1)
+               for s, w in per_len_paged.items()},
+           "plan": None}
+    for p in ("p50", "p95", "p99"):
+        row[f"prefill_ms_{p}"] = round(pre[p] * 1e3, 3)
+        row[f"paged_prefill_ms_{p}"] = round(pre_paged[p] * 1e3, 3)
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b-smoke")
@@ -247,6 +372,31 @@ def main(argv=None):
                                    args.max_len, args.max_batch,
                                    args.page_size)
             results += [row, prow]
+            if name == "float":
+                brow = bucketed_prefill_baseline(
+                    cfg, params, prompt_lens, args.requests,
+                    args.max_len, args.max_batch, args.page_size)
+                # both sides of the delta come from the baseline row's
+                # direct per-admission harness (same timing discipline);
+                # prow's own prefill_ms_* stays tracer-measured in situ
+                prow["prefill_vs_bucketed"] = {
+                    "bucketed_ms_p50": brow["prefill_ms_p50"],
+                    "paged_ms_p50": brow["paged_prefill_ms_p50"],
+                    "ttft_delta_ms": {
+                        p: round(brow[f"paged_prefill_ms_{p}"]
+                                 - brow[f"prefill_ms_{p}"], 3)
+                        for p in ("p50", "p95", "p99")},
+                }
+                assert (brow["paged_prefill_ms_p50"]
+                        <= brow["prefill_ms_p50"]), \
+                    ("paged prefill slower than the bucketed baseline: "
+                     f"{brow['paged_prefill_ms_p50']} > "
+                     f"{brow['prefill_ms_p50']} ms")
+                results.append(brow)
+                print(f"serve/prefill-bucketed-baseline,"
+                      f"{brow['prefill_ms_p50'] * 1e3:.0f},"
+                      f"paged_prefill_ms_p50="
+                      f"{brow['paged_prefill_ms_p50']}")
             print(f"serve/{name},{row['wall_s'] * 1e6:.0f},"
                   f"tok_per_s={row['tok_per_s']},"
                   f"gather_us={row['gather_us_per_step']},"

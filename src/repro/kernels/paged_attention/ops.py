@@ -1,29 +1,38 @@
-"""Dispatch wrapper for paged decode attention: kernel on TPU, gathered
-view off-TPU, exact-mirror reference for tests.
+"""Dispatch wrapper for paged attention (decode AND prefill): kernel on
+TPU, gathered view off-TPU, exact-mirror reference for tests.
 
 ``impl`` resolution (also overridable process-wide via :func:`force_impl`
-for tests):
+for tests; the override pins BOTH entry points):
 
-* ``"kernel"`` -- the Pallas kernel (compiled on TPU, interpret mode
+* ``"kernel"`` -- the Pallas kernels (compiled on TPU, interpret mode
   elsewhere).  The production TPU path.
-* ``"view"``   -- ``ref.paged_attention_view``: gathered dense view +
-  the dense decode-attention op sequence; bitwise identical to the
-  dense cache backend, and the fast formulation for CPU/GPU where the
-  pool gather compiles to one fused XLA op.
-* ``"ref"``    -- ``ref.paged_attention_ref``: the bitwise mirror of the
-  kernel (python-looped; oracle only).
+* ``"view"``   -- the gathered dense view + the dense attention op
+  sequence (``decode_attention`` for decode, ``flash_attention`` for
+  prefill); bitwise identical to the dense cache backend, and the fast
+  formulation for CPU/GPU where the pool gather compiles to one fused
+  XLA op.
+* ``"ref"``    -- the bitwise mirrors of the kernels (python-looped;
+  oracles only).
 """
 from __future__ import annotations
 
 import contextlib
+import math
 
 import jax
 
 from repro.kernels.paged_attention import kernel as _k
+from repro.kernels.paged_attention import prefill as _pf
 from repro.kernels.paged_attention import ref as _ref
 
 paged_attention_ref = _ref.paged_attention_ref
 paged_attention_view = _ref.paged_attention_view
+paged_prefill_ref = _pf.paged_prefill_ref
+paged_prefill_view = _pf.paged_prefill_view
+
+# widest q chunk the prefill kernel tiles with; the actual chunk is the
+# largest power-of-two divisor of the (padded) prompt length up to this
+PREFILL_Q = 16
 
 _IMPLS = ("kernel", "view", "ref")
 _impl_override: str | None = None
@@ -76,3 +85,37 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return _k.paged_attention_fwd(q, k_pool, v_pool, tables, pos,
                                   window=window, chunked=chunked, cap=cap,
                                   interpret=not _on_tpu())
+
+
+def prefill_q_chunk(s: int) -> int:
+    """Largest power-of-two q-chunk width up to :data:`PREFILL_Q` that
+    tiles a length-``s`` prompt (the engine pads paged attention-only
+    prompts to a multiple of PREFILL_Q, so serving always gets the full
+    width; exact-length hybrid prefill degrades gracefully)."""
+    return math.gcd(s, PREFILL_Q)
+
+
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, tables: jax.Array,
+                            lens: jax.Array, *, window: int = 0,
+                            chunked: bool = False, cap: float = 0.0,
+                            impl: str | None = None) -> jax.Array:
+    """Prefill attention over the page pool.  q: (B, S, H, D) -- the
+    prompt's queries, rows at or beyond ``lens`` being discarded
+    padding; k_pool/v_pool: (n_pages + 1, page_size, Hkv, D); tables:
+    (B, P) physical page ids (0 = null); lens: (B,) real prompt
+    lengths.  Returns (B, S, H, D) in q's dtype."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _pf.paged_prefill_ref(q, k_pool, v_pool, tables, lens,
+                                     window=window, chunked=chunked,
+                                     cap=cap,
+                                     q_chunk=prefill_q_chunk(q.shape[1]))
+    if impl == "view":
+        return _pf.paged_prefill_view(q, k_pool, v_pool, tables, lens,
+                                      window=window, chunked=chunked,
+                                      cap=cap)
+    return _pf.paged_prefill_fwd(q, k_pool, v_pool, tables, lens,
+                                 window=window, chunked=chunked, cap=cap,
+                                 q_chunk=prefill_q_chunk(q.shape[1]),
+                                 interpret=not _on_tpu())

@@ -81,17 +81,24 @@ def make_prefill_step(cfg: ArchConfig):
     return step_fn
 
 
-def make_bucketed_prefill_step(cfg: ArchConfig):
-    """Prefill for page-bucketed prompts: ``tokens`` is padded up to a
-    page boundary, ``last_pos`` is the () int32 index of the last REAL
-    prompt token.  Compiled once per page-count bucket instead of once per
-    distinct prompt length (last_pos is traced, not baked in).  Only valid
-    for attention-only stacks -- an SSM mixer's recurrent state would be
-    polluted by the trailing padding; pure/hybrid-SSM archs prefill at
-    exact length instead."""
-    def step_fn(params, batch, last_pos):
+def make_paged_prefill_step(cfg: ArchConfig):
+    """Prefill straight into a :class:`~repro.serve.cache.PagedCache`
+    page pool: ``kv_caches`` is the pool subtree (donated by the engine
+    so the page writes are in place), ``tables`` the slot's block tables
+    sliced to the live width, ``lens`` the (B,) REAL prompt lengths.
+    ``tokens`` may be padded up to a q-chunk boundary -- the attention
+    kernel masks rows at or beyond ``lens`` and the pool scatter drops
+    them, so one compile per (padded length, table width) serves every
+    prompt length in the chunk (last_pos is traced, not baked in).  Only
+    valid for attention-only stacks -- an SSM mixer's recurrent state
+    would be polluted by the trailing padding; pure/hybrid-SSM archs
+    prefill at exact length instead."""
+    def step_fn(params, batch, kv_caches, tables, lens):
         logits, caches = lm.forward(cfg, params, batch, mode="prefill",
-                                    logits_mode="last", last_pos=last_pos)
+                                    logits_mode="last",
+                                    last_pos=lens[0] - 1,
+                                    caches=kv_caches, pos=lens,
+                                    tables=tables)
         return logits, caches
     return step_fn
 

@@ -463,12 +463,16 @@ def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
     never materializes (B, S, V)) | "hidden" (return the final hidden
     states; the caller computes logits, e.g. the chunked loss below).
     last_pos: with logits_mode="last", an () int32 position to read
-    instead of S-1 -- page-bucketed prefill pads the prompt to a page
-    boundary and reads the logits of the last REAL token (causal attention
-    makes every position <= last_pos independent of the padding).
-    tables: paged decode only -- (B, P) int32 block tables; `caches`
-    KV leaves are then page pools (see ``init_paged_caches``) and the
-    attention layers run the paged-attention kernel in place.
+    instead of S-1 -- paged prefill pads the prompt to a q-chunk
+    boundary and reads the logits of the last REAL token (causal
+    attention makes every position <= last_pos independent of the
+    padding).
+    tables: paged serving -- (B, P) int32 block tables; `caches` KV
+    leaves are then page pools (see ``init_paged_caches``) and the
+    attention layers run the paged-attention kernels in place.  For
+    mode="prefill" pass `pos` as the (B,) real prompt lengths; the
+    prompt K/V is scattered straight into the slot's pages and
+    attention reads the pool (no dense round-trip).
     """
     getw = _make_effective_w(ctx, cfg.mps_precisions)
     enc_out = None

@@ -219,6 +219,23 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     return out[:, None]
 
 
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, tables: jax.Array,
+                            lens: jax.Array, *, window: int = 0,
+                            chunked: bool = False, cap: float = 0.0
+                            ) -> jax.Array:
+    """Prompt attention straight over the KV page pool (no dense
+    round-trip).  q: (B, S, H, D) with rows at or beyond ``lens``
+    being discarded padding; k_pool/v_pool: (n_pages + 1, page_size,
+    Hkv, D); tables: (B, P) physical page ids (0 = reserved null
+    page); lens: (B,) real prompt lengths.  Dispatches to the
+    q-chunked Pallas kernel on TPU and to the gathered-view reference
+    (the dense :func:`flash_attention` op sequence) off-TPU."""
+    return paged_ops.paged_prefill_attention(q, k_pool, v_pool, tables,
+                                             lens, window=window,
+                                             chunked=chunked, cap=cap)
+
+
 # ---------------------------------------------------------------------------
 # attention layer (projections + cache plumbing)
 # ---------------------------------------------------------------------------
@@ -234,12 +251,13 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
     mode="prefill" the produced K/V are returned as the new cache; for
     mode="decode" the token's K/V are written at `pos`.
 
-    tables (decode only): (B, P) int32 per-slot block tables of a
+    tables (decode + prefill): (B, P) int32 per-slot block tables of a
     :class:`~repro.serve.cache.PagedCache` -- cache["k"/"v"] are then
     page POOLS of shape (n_pages + 1, page_size, Hkv, D) and attention
-    runs directly on the pool (see :func:`paged_decode_attention`); the
-    tables ride OUTSIDE the (donated) cache tree so the device copy
-    survives across steps.
+    runs directly on the pool (:func:`paged_decode_attention` /
+    :func:`paged_prefill_attention`); for mode="prefill", `pos` carries
+    the (B,) real prompt lengths.  The tables ride OUTSIDE the
+    (donated) cache tree so the device copy survives across steps.
     """
     b, s, _ = x.shape
     h, hkv, hd = cfg.h_eff, cfg.hkv_eff, cfg.head_dim
@@ -324,9 +342,37 @@ def attention_layer(p: dict, x: jax.Array, cfg, *, kind: str = "full",
         positions = jnp.arange(s)
         q = rope(q, positions, cfg.rope_theta)
         kk = rope(kk, positions, cfg.rope_theta)
-        out = flash_attention(q, kk, vv, causal=causal, window=window,
-                              chunked=chunked, cap=cfg.attn_softcap)
-        new_cache = {"k": kk, "v": vv} if mode == "prefill" else None
+        if mode == "prefill" and cache is not None and tables is not None:
+            # paged prefill (serve.cache.PagedCache): cache["k"/"v"] are
+            # page pools, `tables` the per-slot block tables (B, P), and
+            # `pos` the (B,) REAL prompt lengths (rows at or beyond it
+            # are padding).  Prompt K/V is scattered straight into the
+            # slot's pages -- with the tree donated this writes the pool
+            # in place -- and attention reads the pool directly.  Padded
+            # rows are routed out of bounds and dropped so the pool (in
+            # particular the shared null page) only ever holds real
+            # tokens; garbage past a partial page's tail never exists.
+            page_size = cache["k"].shape[1]
+            lens_b = jnp.broadcast_to(jnp.asarray(pos), (b,))       # (B,)
+            pg = jnp.minimum(positions // page_size,
+                             tables.shape[1] - 1)                   # (S,)
+            phys = tables[jnp.arange(b)[:, None], pg[None, :]]      # (B,S)
+            phys = jnp.where(positions[None, :] < lens_b[:, None],
+                             phys, cache["k"].shape[0])             # OOB
+            off = jnp.broadcast_to(positions[None, :] % page_size,
+                                   (b, s))
+            ck = cache["k"].at[phys, off].set(
+                kk.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[phys, off].set(
+                vv.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": ck, "v": cv}
+            out = paged_prefill_attention(q, ck, cv, tables, lens_b,
+                                          window=window, chunked=chunked,
+                                          cap=cfg.attn_softcap)
+        else:
+            out = flash_attention(q, kk, vv, causal=causal, window=window,
+                                  chunked=chunked, cap=cfg.attn_softcap)
+            new_cache = {"k": kk, "v": vv} if mode == "prefill" else None
 
     out = out.reshape(b, s, h * hd)
     y = linear(out, getw(p["wo"]))

@@ -321,45 +321,18 @@ class PagedCache(CacheBackend):
         self.dense_equivalent_bytes = lm.dense_cache_bytes(
             cfg, max_batch, max_len)
 
-        def ins(caches, pcaches, slot, page_ids):
-            out = {}
-            for lname, c in caches.items():
-                nc = {}
-                if "kv" in c:
-                    nc["kv"] = {
-                        kk: self._scatter_pages(c["kv"][kk],
-                                                pcaches[lname]["kv"][kk],
-                                                page_ids)
-                        for kk in ("k", "v")}
-                if "mamba" in c:
-                    nc["mamba"] = jax.tree.map(
-                        lambda big, small: _ins_slot(big, small, slot),
-                        c["mamba"], pcaches[lname]["mamba"])
-                out[lname] = nc
-            return out
+        def ins_mamba(mstates, pstates, slot):
+            return jax.tree.map(
+                lambda big, small: _ins_slot(big, small, slot),
+                mstates, pstates)
 
-        self._insert = jax.jit(ins, donate_argnums=(0,))
-
-    def _scatter_pages(self, pool, kv, page_ids):
-        """kv: (nsb, 1, S, hkv, hd) prompt K/V -> pool pages."""
-        kv = kv.astype(pool.dtype)
-        nsb, _, s, hkv, hd = kv.shape
-        npg = page_ids.shape[0]
-        pad = npg * self.page_size - s
-        if pad:
-            kv = jnp.pad(kv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-        kv = kv.reshape(nsb, npg, self.page_size, hkv, hd)
-        return pool.at[:, page_ids].set(kv)
+        self._insert_mamba = jax.jit(ins_mamba, donate_argnums=(0,))
 
     # -- page arithmetic ----------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
         if not self._has_kv:
             return 0               # pure-SSM: state is per-slot, no pages
         return -(-max(n_tokens, 0) // self.page_size)
-
-    def padded_len(self, n_tokens: int) -> int:
-        """Prompt length padded up to a page boundary (bucketed prefill)."""
-        return max(self.pages_for(n_tokens), 1) * self.page_size
 
     # -- admission contract -------------------------------------------------
     def _admission_pages(self, n_prompt: int) -> int:
@@ -477,12 +450,37 @@ class PagedCache(CacheBackend):
         return n
 
     # -- data movement ------------------------------------------------------
+    def kv_caches(self):
+        """The KV-pool subtree ``{layer: {"kv": {"k","v"}}}`` to hand to
+        (and have donated by) the engine's paged prefill step; layers
+        without attention are absent.  Empty for pure-SSM stacks.  After
+        the step runs, the pools referenced here are dead (donated) until
+        :meth:`insert` commits the step's outputs."""
+        return {ln: {"kv": c["kv"]} for ln, c in self.caches.items()
+                if "kv" in c}
+
     def insert(self, handle, prefill_caches):
-        page_ids = jnp.asarray(handle.pages, jnp.int32) if handle.pages \
-            else jnp.zeros((0,), jnp.int32)
-        self.caches = self._insert(self.caches, prefill_caches,
-                                   jnp.asarray(handle.slot, jnp.int32),
-                                   page_ids)
+        """Commit one admitted request's prefill state.
+
+        KV leaves of ``prefill_caches`` are the page POOLS returned by
+        the engine's paged prefill step -- the prompt K/V was already
+        scattered into this request's pages inside the jit, with the old
+        pools donated, so committing them is a pointer swap (no dense
+        round-trip, no per-admission scatter dispatch).  SSM leaves are
+        per-slot ``(nsb, 1, ...)`` prefill states, scattered into the
+        slot's row of the state tree."""
+        for lname, c in self.caches.items():
+            pc = prefill_caches.get(lname) or {}
+            if "kv" in c and "kv" in pc:
+                c["kv"] = pc["kv"]
+        m_big = {ln: c["mamba"] for ln, c in self.caches.items()
+                 if "mamba" in c}
+        if m_big:
+            m_small = {ln: prefill_caches[ln]["mamba"] for ln in m_big}
+            m_new = self._insert_mamba(m_big, m_small,
+                                       jnp.asarray(handle.slot, jnp.int32))
+            for ln, st in m_new.items():
+                self.caches[ln]["mamba"] = st
 
     def device_tables(self):
         # the SAME device array across steps (it rides outside the

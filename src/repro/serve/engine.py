@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged_attention import ops as paged_ops
 from repro.launch import steps
 from repro.models import lm
 from repro.nn import quantized as nnq
@@ -188,18 +189,27 @@ class InferenceServer:
             "reserve_pages": reserve_pages}
         self.backend = cache_mod.make_backend(cache, cfg, self.max_batch,
                                               self.max_len, **kwargs)
-        # page-bucketed prefill needs causal position-locality; an SSM
-        # mixer's recurrent state would absorb the padding, so SSM/hybrid
-        # archs prefill at exact length (compiled per prompt length) and
-        # only attention-only stacks get the per-page-count buckets
+        # paged prefill writes the prompt's KV straight into the page
+        # pool (no dense round-trip; see make_paged_prefill_step).
+        # Attention-only stacks pad the prompt to a q-chunk boundary --
+        # the coarser of one sublane tile (8) and the page bucket,
+        # capped at PREFILL_Q -- one compile per (padded length, table
+        # width), never prefilling past the page bucket the retired
+        # dense path used; an SSM mixer's recurrent state would absorb
+        # the padding, so SSM/hybrid archs prefill at exact length
+        # (compiled per prompt length), still straight into the pool.
+        # Pure-SSM stacks have no KV pages at all and take the dense
+        # prefill step (per-slot state insert only).
         self._has_ssm = any(spec.mixer == "mamba"
                             for spec in lm.block_pattern(cfg))
-        self._bucketed = (self.backend.name == "paged"
-                          and not self._has_ssm)
+        self._paged_kv = (self.backend.name == "paged"
+                          and getattr(self.backend, "_has_kv", False))
+        # labels of the last admission's prefill on
+        # serve_prefill_tokens_total (set by _run_prefill)
+        self._prefill_path = "dense"
+        self._prefill_width = "dense"
 
         self._prefill = jax.jit(steps.make_prefill_step(cfg))
-        self._prefill_bucketed = jax.jit(
-            steps.make_bucketed_prefill_step(cfg))
         # donate the cache tree: decode updates it in place instead of
         # copying the full pool buffers per token (no-op on CPU, where
         # XLA ignores donation).  The paged block tables ride OUTSIDE
@@ -214,6 +224,21 @@ class InferenceServer:
                     or width >= tables.shape[1]:
                 return tables
             return jax.lax.slice_in_dim(tables, 0, width, axis=1)
+
+        # paged prefill: the slot's block-table row is sliced ON DEVICE
+        # from the backend's resident tables (slot is traced -- no
+        # per-slot compile, no per-admission host upload beyond alloc's
+        # incremental row patch) and narrowed to the static live width;
+        # the kv pool tree is donated so the prompt scatter is in place
+        _paged_prefill = steps.make_paged_prefill_step(cfg)
+
+        def prefill_paged(p, tok, kv, tbl, slot, lens, width):
+            row = jax.lax.dynamic_slice_in_dim(tbl, slot, 1, axis=0)
+            return _paged_prefill(p, tok, kv, _live_tables(row, width),
+                                  lens)
+
+        self._prefill_paged = jax.jit(prefill_paged, donate_argnums=(2,),
+                                      static_argnums=(6,))
 
         self._decode = jax.jit(
             lambda p, t, c, tbl, pos, width: lm.decode_step(
@@ -423,10 +448,17 @@ class InferenceServer:
                 tracer.event(req.uid, "prefilled", n=tokens_np.size,
                              pages_held=len(handle.pages), slot=slot)
             if reg is not None:
+                # one series per (path, width) == one compiled prefill
+                # variant on the paged path (width is a static argument
+                # of the jit; "dense"/"dense" for the dense backend and
+                # pure-SSM stacks)
                 reg.counter("serve_prefill_tokens_total",
                             "Tokens run through prefill (resumes "
-                            "re-prefill prompt + generated)").inc(
-                    int(tokens_np.size))
+                            "re-prefill prompt + generated) by prefill "
+                            "path and static live-table width",
+                            labels=("path", "width")).inc(
+                    int(tokens_np.size), path=self._prefill_path,
+                    width=self._prefill_width)
             self._n_admitted += 1
             if entry.resume is None:
                 rng = make_rng(req.sampling, req.uid)
@@ -664,18 +696,33 @@ class InferenceServer:
 
     def _run_prefill(self, backend, handle, tokens_np):
         """Fused full-sequence prefill; insert KV/SSM into the backend.
-        Returns the (1, V_pad) logits of the last real prompt token."""
+        Paged KV stacks prefill straight into the page pool: the pool
+        tree is donated into the jit, so the prompt's K/V lands in the
+        request's pages in place -- no dense-shaped KV round-trip, no
+        per-admission scatter dispatch.  Returns the (1, V_pad) logits
+        of the last real prompt token."""
         s = int(tokens_np.size)
-        if self._bucketed:
-            spad = backend.padded_len(s)
-            padded = np.zeros(spad, np.int32)
-            padded[:s] = tokens_np
-            logits, pcaches = self._prefill_bucketed(
-                self.params, {"tokens": jnp.asarray(padded)[None]},
-                jnp.asarray(s - 1, jnp.int32))
+        # numpy operands go straight into the jit call (one C++-side
+        # device put each) -- per-admission python-dispatched puts are
+        # pure TTFT overhead
+        if self._paged_kv:
+            q = min(paged_ops.PREFILL_Q, max(8, backend.page_size))
+            spad = s if self._has_ssm else -(-s // q) * q
+            padded = np.zeros((1, spad), np.int32)
+            padded[0, :s] = tokens_np
+            width = min(-(-spad // backend.page_size),
+                        backend.table_width)
+            logits, pcaches = self._prefill_paged(
+                self.params, {"tokens": padded},
+                backend.kv_caches(), backend.device_tables(),
+                np.int32(handle.slot), np.asarray([s], np.int32), width)
+            self._prefill_path = "paged"
+            self._prefill_width = str(width)
         else:
             logits, pcaches = self._prefill(
-                self.params, {"tokens": jnp.asarray(tokens_np)[None]})
+                self.params, {"tokens": tokens_np[None]})
+            self._prefill_path = "dense"
+            self._prefill_width = "dense"
         backend.insert(handle, pcaches)
         return logits[:, -1, :]
 

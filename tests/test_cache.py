@@ -3,9 +3,11 @@ memory-aware admission contract (pool-exhaustion queuing, preemption
 requeue ordering), page free-on-retire leak checks, paged-vs-dense
 token-for-token parity across mixed prompt lengths (float + quantized,
 greedy + seeded device sampling, streaming + preemption, gathered-view
-AND Pallas-kernel attention impls), the device-resident block tables
-(no per-step host sync), and the on-device sampling path vs. the host
-fallback."""
+AND Pallas-kernel attention impls), the paged-PREFILL conformance
+matrix (solo/batched/streaming/preempted re-prefill under every prefill
+impl, page-boundary prompt footprints, one bounded table upload per
+admission), the device-resident block tables (no per-step host sync),
+and the on-device sampling path vs. the host fallback."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -294,7 +296,9 @@ class TestPagedDenseParity:
         paged = engine.InferenceServer(cfg, params, max_len=48,
                                        max_batch=2, cache="paged",
                                        page_size=8, pages=8)
-        assert not paged._bucketed
+        # hybrid: pool-direct prefill, but at EXACT length (q-chunk
+        # padding would pollute the SSM state)
+        assert paged._paged_kv and paged._has_ssm
         sp = SamplingParams(max_tokens=4)
         ref = dense.serve(_reqs(cfg, (7, 12), sp, seed=3))
         out = paged.serve(_reqs(cfg, (7, 12), sp, seed=3))
@@ -359,6 +363,109 @@ class TestPagedKernelParity:
             out = paged.serve(_reqs(cfg, lens, sp, seed=1))
         for i in range(len(lens)):
             np.testing.assert_array_equal(ref[i], out[i])
+
+
+class TestPagedPrefillConformance:
+    """PR 10: admission-time prefill runs the q-chunked paged kernel
+    straight over the page pool (no dense scatter round-trip).  The
+    dense-vs-paged token-equality invariant must survive it across the
+    full serving matrix, for every prefill impl in the fallback ladder.
+    """
+
+    @pytest.mark.parametrize("impl", ["kernel", "view"])
+    def test_float_solo_batched_streaming(self, llama, impl):
+        """solo == batched == streaming-arrivals == dense, with prompt
+        lengths hitting an exact page multiple (16), a multiple-minus-1
+        (15), an odd length and a single token."""
+        cfg, params = llama
+        sp = SamplingParams(max_tokens=5)
+        lens = (13, 16, 1, 15)
+        dense = engine.InferenceServer(cfg, params, max_len=48, max_batch=2)
+        ref_b = dense.serve(_reqs(cfg, lens, sp, seed=9))
+        ref_s = dense.serve([_reqs(cfg, lens, sp, seed=9)[1]])
+        with paged_ops.force_impl(impl):
+            paged = engine.InferenceServer(cfg, params, max_len=48,
+                                           max_batch=2, cache="paged",
+                                           page_size=8, pages=12)
+            out_b = paged.serve(_reqs(cfg, lens, sp, seed=9))
+            out_s = paged.serve([_reqs(cfg, lens, sp, seed=9)[1]])
+            out_g = paged.serve(_reqs(cfg, lens, sp, gap=2, seed=9))
+        for i in range(len(lens)):
+            np.testing.assert_array_equal(ref_b[i], out_b[i])
+            np.testing.assert_array_equal(ref_b[i], out_g[i])
+        np.testing.assert_array_equal(ref_s[1], out_s[1])
+        assert paged.stats["memory"]["pages_in_use"] == 0
+
+    def test_quantized_preempted_reprefill_kernel_impl(self, llama):
+        """Plan-quantized weights + a pool small enough to preempt: the
+        resumed requests re-prefill prompt+generated through the paged
+        KERNEL and every stream stays byte-identical to dense."""
+        cfg, params = llama
+        plan = engine.synthetic_plan(cfg, params, bits=None, seed=0)
+        sp = SamplingParams(temperature=0.6, top_k=10, max_tokens=8,
+                            seed=3)
+        lens = (4, 9, 6, 13)
+        dense = engine.InferenceServer(cfg, params, plan=plan, max_len=32,
+                                       max_batch=3)
+        ref = dense.serve(_reqs(cfg, lens, sp, seed=5))
+        with paged_ops.force_impl("kernel"):
+            tiny = engine.InferenceServer(cfg, params, plan=plan,
+                                          max_len=32, max_batch=3,
+                                          cache="paged", page_size=4,
+                                          pages=7)
+            out = tiny.serve(_reqs(cfg, lens, sp, seed=5))
+        assert tiny.stats["preemptions"] > 0     # re-prefill exercised
+        for i in range(len(lens)):
+            np.testing.assert_array_equal(ref[i], out[i])
+        assert tiny.stats["memory"]["pages_in_use"] == 0
+
+    def test_page_boundary_prompts_same_footprint(self, llama):
+        """Stale-bucket hazard regression: prompts of exactly
+        page_size*k and page_size*k - 1 tokens land in the same
+        written-page footprint -- identical memory_report() page counts.
+        (The old padded bucketed prefill scattered the padded length, so
+        a boundary-straddling bucket could touch one page more than the
+        admission priced.)"""
+        cfg, params = llama
+        sp = SamplingParams(max_tokens=3)
+        reports = {}
+        for n in (16, 15):                       # page_size*2, *2 - 1
+            paged = engine.InferenceServer(cfg, params, max_len=48,
+                                           max_batch=2, cache="paged",
+                                           page_size=8, pages=10)
+            dense = engine.InferenceServer(cfg, params, max_len=48,
+                                           max_batch=2)
+            ref = dense.serve(_reqs(cfg, (n,), sp, seed=1))
+            out = paged.serve(_reqs(cfg, (n,), sp, seed=1))
+            np.testing.assert_array_equal(ref[0], out[0])
+            reports[n] = paged.stats["memory"]
+        for key in ("pages_in_use", "peak_pages_in_use"):
+            assert reports[16][key] == reports[15][key], key
+        # prompt+decode spans positions 0..18 -> exactly 3 pages peak
+        assert reports[16]["peak_pages_in_use"] == 3
+        assert reports[16]["pages_in_use"] == 0
+
+    def test_one_bounded_upload_per_admission_no_retrace(self, llama):
+        """Admission uploads exactly ONE table row (alloc's incremental
+        patch); the paged prefill itself slices the slot's row on device
+        and performs no further host->device table traffic.  A warm
+        second session must not re-trace any cache updater."""
+        cfg, params = llama
+        sp = SamplingParams(max_tokens=4)
+        lens = (13, 9, 13, 9)
+        paged = engine.InferenceServer(cfg, params, max_len=48,
+                                       max_batch=2, cache="paged",
+                                       page_size=8, pages=12)
+        paged.serve(_reqs(cfg, lens, sp, seed=3))
+        mem = paged.stats["memory"]
+        assert paged.stats["preemptions"] == 0   # pool is ample
+        assert mem["table_host_uploads"] == paged.stats["admitted"] == 4
+        # warm server, same lengths: no new traces of the jitted table
+        # updaters or the prefill/insert path
+        traces = dict(cache_mod.TRACE_COUNTS)
+        paged.serve(_reqs(cfg, lens, sp, seed=4))
+        assert dict(cache_mod.TRACE_COUNTS) == traces
+        assert paged.stats["memory"]["table_host_uploads"] == 4
 
 
 class TestDeviceTables:

@@ -181,6 +181,10 @@ class TestScheduler:
         cancels every live request and front-re-enqueues them in
         reverse seniority (the fleet's failover path) restores the
         exact pre-crash order, and load() mirrors the model throughout.
+        The prefill_admit op models the engine's memory-gated paged
+        admission: can_admit is consulted on the HEAD only, a blocked
+        head blocks the whole queue (no skip-ahead), and an admitted
+        entry's tokens() is exactly what prefill re-runs.
         Complements the trace-replay FRONT-order check in test_obs."""
         rng = np.random.default_rng(seed)
         sched = Scheduler(max_batch=max_batch, max_len=32)
@@ -193,8 +197,8 @@ class TestScheduler:
         for _ in range(60):
             if not queue and not active:
                 break
-            op = rng.choice(["admit", "complete", "preempt", "cancel",
-                             "crash"])
+            op = rng.choice(["admit", "prefill_admit", "complete",
+                             "preempt", "cancel", "crash"])
             if op == "admit":
                 res = sched.pop_admissible(0)
                 if len(active) == max_batch or not queue:
@@ -203,6 +207,37 @@ class TestScheduler:
                 entry, slot = res
                 assert entry.request.uid == queue[0], \
                     f"admitted {entry.request.uid}, head was {queue}"
+                queue.pop(0)
+                st = _dummy_state(entry, slot)
+                st.order = admit_seq
+                admit_seq += 1
+                sched.activate(slot, st)
+                active[slot] = st
+            elif op == "prefill_admit":
+                # the engine's paged-prefill admission: the backend's
+                # memory gate sees the head only -- blocked head, blocked
+                # queue (strict FCFS, no probe of later entries)
+                blocked = bool(rng.integers(0, 2))
+                probed = []
+
+                def gate(entry, probed=probed, blocked=blocked):
+                    probed.append(entry.request.uid)
+                    return not blocked
+
+                res = sched.pop_admissible(0, can_admit=gate)
+                if len(active) == max_batch or not queue:
+                    assert res is None
+                    continue
+                assert probed == [queue[0]]      # gate saw only the head
+                if blocked:
+                    assert res is None           # head-of-line blocking
+                    continue
+                entry, slot = res
+                assert entry.request.uid == queue[0]
+                # a resumed entry re-prefills prompt + generated stream
+                exp = entry.request.prompt.size + (
+                    len(entry.resume.out) if entry.resume else 0)
+                assert entry.tokens().size == exp
                 queue.pop(0)
                 st = _dummy_state(entry, slot)
                 st.order = admit_seq
